@@ -1,0 +1,47 @@
+"""Benchmark utilities: timing, modeled wire latency, CSV rows.
+
+Latency reporting: the container has no NVM/RDMA, so each row reports
+BOTH the measured wall time of the real work (file IO + protocol) and a
+modeled wire component derived from transport accounting
+(bytes / 3.8GB/s + hops * 8us — Table 1's NVM-RDMA row). Relative
+comparisons (Assise vs disaggregated vs no-cache) are the point.
+"""
+from __future__ import annotations
+
+import statistics
+import tempfile
+import time
+
+ROWS = []
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def time_us(fn, n: int, warmup: int = 2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def time_each_us(fn, n: int):
+    out = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e6)
+    return out
+
+
+def pct(xs, p):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(len(xs) * p / 100))]
+
+
+def tmpdir(tag: str) -> str:
+    return tempfile.mkdtemp(prefix=f"repro_bench_{tag}_")

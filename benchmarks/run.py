@@ -1,0 +1,33 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (see DESIGN.md §6 for the table/figure -> benchmark map).
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+    from benchmarks import paper, train_ckpt
+    benches = paper.ALL + train_ckpt.ALL
+    print("name,us_per_call,derived")
+    failed = 0
+    for b in benches:
+        if args.only and args.only not in b.__name__:
+            continue
+        t0 = time.time()
+        try:
+            b()
+        except Exception:
+            failed += 1
+            print(f"BENCH-FAIL {b.__name__}", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {b.__name__} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,13 @@
+"""MinuteSort-style external sort through the Assise store (paper
+Table 3 analogue): range-partition + merge over 4 simulated nodes,
+with validation.
+
+    PYTHONPATH=src python examples/distributed_sort.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks.paper import bench_sort  # noqa: E402
+
+if __name__ == "__main__":
+    bench_sort()

@@ -1,0 +1,40 @@
+"""Quickstart: the Assise layer + a model in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import AssiseCluster
+from repro.models import Model, RunConfig
+
+# 1. A simulated 3-node cluster: this node + a cache replica + a reserve.
+cluster = AssiseCluster(tempfile.mkdtemp(), n_nodes=3, replication=2,
+                        n_reserve=1, mode="pessimistic")
+store = cluster.open_process("app0")
+
+# 2. Operation-granularity writes into colocated "NVM"; fsync replicates.
+store.put("/hello/world", b"assise")
+store.fsync()
+print("read:", store.get("/hello/world"))
+
+# 3. Kill the node; fail over to the replica: state is already there.
+cluster.kill_node(store.sfs.node_id)
+cluster.detect_failures_now()
+store = cluster.failover_process("app0")
+print("after failover:", store.get("/hello/world"),
+      "on", store.sfs.node_id)
+
+# 4. A reduced assigned architecture, one forward pass.
+cfg = get_config("gemma3-1b-reduced")
+rc = RunConfig(chunk_q=32, chunk_kv=32, param_dtype=jnp.float32)
+model = Model(cfg, rc)
+params = model.init(jax.random.key(0))
+tokens = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+loss, metrics = jax.jit(model.loss)(
+    params, {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)})
+print(f"{cfg.name}: loss={float(loss):.3f}")
+cluster.close()

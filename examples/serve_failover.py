@@ -1,0 +1,16 @@
+"""Batched decoding with Assise-backed session state: the serving node is
+killed mid-generation and the session resumes on the replica from the
+last state snapshot (O(1)-state SSM archs make this near-free).
+
+    PYTHONPATH=src python examples/serve_failover.py
+"""
+import sys
+import tempfile
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main(["--arch", "rwkv6-1.6b-reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "48",
+                "--snapshot-every", "16", "--inject-failure", "24",
+                "--workdir", tempfile.mkdtemp()] + sys.argv[1:])

@@ -1,0 +1,34 @@
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import Model, RunConfig, count_params
+
+rc = RunConfig(chunk_q=32, chunk_kv=32, mamba_chunk=16, rwkv_chunk=16,
+               param_dtype=jnp.float32, cache_dtype=jnp.float32)
+
+for name in ARCH_IDS:
+    cfg = reduced(get_config(name))
+    m = Model(cfg, rc)
+    key = jax.random.key(0)
+    params = m.init(key)
+    n = count_params(cfg, rc)
+    b, s = 2, 64
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.n_frontend:
+        batch["frontend_embeds"] = jnp.zeros((b, cfg.n_frontend, cfg.d_model))
+    loss, metrics = jax.jit(m.loss)(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+    # prefill + decode
+    caches = m.init_cache(b, s + cfg.n_frontend + 8)
+    fe = batch.get("frontend_embeds")
+    logits, caches = jax.jit(m.prefill)(params, tokens, caches, fe)
+    assert logits.shape[0] == b and jnp.isfinite(logits).all(), name
+    pos = jnp.asarray(s + cfg.n_frontend, jnp.int32)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, caches = jax.jit(m.decode_step)(params, tok, pos, caches)
+    assert jnp.isfinite(logits2).all(), name
+    print(f"OK {name:28s} loss={float(loss):8.4f} params={n:,}")
+print("ALL OK")

@@ -1,0 +1,5 @@
+from repro.ckpt.checkpoint import AssiseCheckpointer, CheckpointConfig
+from repro.ckpt.delta import block_delta_encode, block_delta_apply
+
+__all__ = ["AssiseCheckpointer", "CheckpointConfig", "block_delta_encode",
+           "block_delta_apply"]

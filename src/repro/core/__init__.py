@@ -1,0 +1,20 @@
+"""CC-NVM adapted to training-state management (the paper's contribution).
+
+Public surface:
+  AssiseCluster  — simulated multi-node cluster harness
+  LibState       — process-linked client (LibFS analogue)
+  UpdateLog      — operation-granularity persistent log
+  SharedFS       — per-node daemon (tiers, digest, leases, slots)
+  ClusterManager — membership, epochs, chains, lease root
+"""
+from repro.core.cluster import ClusterManager
+from repro.core.harness import AssiseCluster
+from repro.core.log import (Entry, UpdateLog, OP_DELETE, OP_PUT, OP_RENAME,
+                            decode_stream)
+from repro.core.sharedfs import SharedFS
+from repro.core.store import LibState, recover_process
+from repro.core.transport import Transport, NodeDown
+
+__all__ = ["AssiseCluster", "ClusterManager", "Entry", "LibState",
+           "NodeDown", "SharedFS", "Transport", "UpdateLog", "OP_PUT",
+           "OP_DELETE", "OP_RENAME", "decode_stream", "recover_process"]

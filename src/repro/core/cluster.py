@@ -1,0 +1,177 @@
+"""Cluster manager (ZooKeeper stand-in): membership, failure detection,
+epochs, subtree->chain mapping, and the root of lease delegation.
+
+Single object standing in for a replicated coordination service; its own
+state changes are journaled to a file so a "cluster-manager restart" test
+can recover it. Heartbeats use an injected clock so tests control time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+HEARTBEAT_TIMEOUT = 1.0  # paper: 1s heartbeat
+MANAGER_TTL = 5.0  # paper: lease management expires every 5s
+
+
+@dataclass
+class NodeInfo:
+    node_id: str
+    last_heartbeat: float = 0.0
+    alive: bool = True
+
+
+class ClusterManager:
+    def __init__(self, journal_path: Optional[str] = None,
+                 clock=time.monotonic):
+        self.nodes: Dict[str, NodeInfo] = {}
+        self.epoch = 0
+        # per-epoch dirty-path sets (the paper's per-epoch inode bitmaps)
+        self.epoch_dirty: Dict[int, set] = {0: set()}
+        # subtree -> ordered replica chain [node ids], reserve replicas
+        self.subtree_chains: Dict[str, List[str]] = {}
+        self.reserves: Dict[str, List[str]] = {}
+        # lease manager assignment: subtree -> (node_id, assigned_at)
+        self.managers: Dict[str, tuple] = {}
+        self.clock = clock
+        self.journal_path = journal_path
+        self._watchers = []
+        if journal_path and os.path.exists(journal_path):
+            self._recover()
+
+    # -- journal -------------------------------------------------------------
+    def _journal(self, rec: dict) -> None:
+        if not self.journal_path:
+            return
+        os.makedirs(os.path.dirname(self.journal_path), exist_ok=True)
+        with open(self.journal_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    def _recover(self) -> None:
+        with open(self.journal_path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    break  # prefix semantics for the journal too
+                if rec["t"] == "chain":
+                    self.subtree_chains[rec["subtree"]] = rec["chain"]
+                    self.reserves[rec["subtree"]] = rec.get("reserve", [])
+                elif rec["t"] == "epoch":
+                    self.epoch = rec["epoch"]
+                    self.epoch_dirty.setdefault(self.epoch, set())
+
+    # -- membership ------------------------------------------------------------
+    def register(self, node_id: str) -> None:
+        self.nodes[node_id] = NodeInfo(node_id, self.clock(), True)
+
+    def watch(self, cb) -> None:
+        """cb(event:str, payload) on membership/epoch changes."""
+        self._watchers.append(cb)
+
+    def _notify(self, event: str, payload) -> None:
+        for cb in self._watchers:
+            cb(event, payload)
+
+    def heartbeat(self, node_id: str) -> None:
+        info = self.nodes.get(node_id)
+        if info:
+            info.last_heartbeat = self.clock()
+
+    def check_failures(self,
+                       timeout: float = HEARTBEAT_TIMEOUT) -> List[str]:
+        now = self.clock()
+        failed = []
+        for info in self.nodes.values():
+            if info.alive and now - info.last_heartbeat > timeout:
+                info.alive = False
+                failed.append(info.node_id)
+        for nid in failed:
+            self.on_node_failed(nid)
+        return failed
+
+    def alive_nodes(self) -> List[str]:
+        return [n for n, i in self.nodes.items() if i.alive]
+
+    # -- epochs (paper §3.4) -----------------------------------------------------
+    def bump_epoch(self) -> int:
+        self.epoch += 1
+        self.epoch_dirty[self.epoch] = set()
+        self._journal({"t": "epoch", "epoch": self.epoch})
+        self._notify("epoch", self.epoch)
+        return self.epoch
+
+    def mark_dirty(self, path: str) -> None:
+        self.epoch_dirty[self.epoch].add(path)
+
+    def dirty_since(self, epoch: int) -> set:
+        out = set()
+        for e, paths in self.epoch_dirty.items():
+            if e >= epoch:
+                out |= paths
+        return out
+
+    def gc_epochs(self, all_recovered_through: int) -> None:
+        for e in [e for e in self.epoch_dirty if e < all_recovered_through]:
+            del self.epoch_dirty[e]
+
+    # -- chains / reserves ----------------------------------------------------------
+    def set_chain(self, subtree: str, chain: List[str],
+                  reserve: Optional[List[str]] = None) -> None:
+        self.subtree_chains[subtree] = list(chain)
+        self.reserves[subtree] = list(reserve or [])
+        self._journal({"t": "chain", "subtree": subtree, "chain": chain,
+                       "reserve": reserve or []})
+
+    def chain_for(self, path: str) -> List[str]:
+        best = "/"
+        for st in self.subtree_chains:
+            if path.startswith(st.rstrip("/") + "/") or path == st:
+                if len(st) > len(best):
+                    best = st
+        return self.subtree_chains.get(best,
+                                       self.subtree_chains.get("/", []))
+
+    def on_node_failed(self, node_id: str) -> None:
+        """Epoch bump + chain repair: promote a reserve replica (§3.5)."""
+        self.bump_epoch()
+        for st, chain in self.subtree_chains.items():
+            if node_id in chain:
+                chain.remove(node_id)
+                pool = self.reserves.get(st, [])
+                if pool:
+                    promoted = pool.pop(0)
+                    chain.append(promoted)
+                    self._notify("promote", (st, promoted))
+                self._journal({"t": "chain", "subtree": st, "chain": chain,
+                               "reserve": pool})
+        # lease management held by the dead node expires immediately
+        for st, (mgr, _) in list(self.managers.items()):
+            if mgr == node_id:
+                del self.managers[st]
+        self._notify("failed", node_id)
+
+    def on_node_recovered(self, node_id: str) -> None:
+        info = self.nodes.get(node_id)
+        if info:
+            info.alive = True
+            info.last_heartbeat = self.clock()
+        self._notify("recovered", node_id)
+
+    # -- lease-manager delegation (root of the hierarchy) ------------------------------
+    def manager_for(self, subtree: str, requester: str) -> str:
+        """Assign (or return) the lease manager for a subtree. First
+        requester wins locality; assignment expires after MANAGER_TTL so
+        management migrates toward current users (paper §3.3)."""
+        now = self.clock()
+        cur = self.managers.get(subtree)
+        if cur is not None:
+            mgr, at = cur
+            if now - at <= MANAGER_TTL and self.nodes.get(
+                    mgr, NodeInfo("x", 0, False)).alive:
+                return mgr
+        self.managers[subtree] = (requester, now)
+        return requester

@@ -1,0 +1,156 @@
+"""AssiseCluster: wires nodes, SharedFS daemons, cluster manager, and
+chains into a runnable simulated cluster (used by tests, benchmarks,
+and examples).
+
+Failure injection:
+  kill_process(ls)          — process crash; NVM log + replica slots live
+  kill_node(id)             — node loss (heartbeat timeout -> epoch bump,
+                              chain repair, reserve promotion)
+  restart_node(id)          — rejoin: epoch-bitmap invalidation + resync
+  failover_process(..)      — restart an app on a cache replica
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Dict, List, Optional
+
+from repro.core.cluster import ClusterManager
+from repro.core.sharedfs import SharedFS
+from repro.core.store import LibState, recover_process
+from repro.core.transport import Transport
+
+
+class AssiseCluster:
+    def __init__(self, root_dir: str, *, n_nodes: int = 3,
+                 replication: int = 2, n_reserve: int = 0,
+                 mode: str = "pessimistic", hot_capacity: int = 1 << 30,
+                 log_capacity: int = 1 << 30,
+                 dram_capacity: int = 2 << 30,
+                 fsync_data: bool = False, clock=time.monotonic):
+        assert replication + n_reserve <= n_nodes
+        self.root = root_dir
+        self.mode = mode
+        self.log_capacity = log_capacity
+        self.dram_capacity = dram_capacity
+        self.fsync_data = fsync_data
+        os.makedirs(root_dir, exist_ok=True)
+        self.transport = Transport()
+        self.cm = ClusterManager(os.path.join(root_dir, "cm.journal"),
+                                 clock=clock)
+        self.node_ids = [f"node{i}" for i in range(n_nodes)]
+        self.hot_capacity = hot_capacity
+        self.sharedfs: Dict[str, SharedFS] = {}
+        for i, nid in enumerate(self.node_ids):
+            self.cm.register(nid)
+            self.sharedfs[nid] = SharedFS(
+                nid, os.path.join(root_dir, nid), self.cm, self.transport,
+                hot_capacity=hot_capacity,
+                is_reserve=(replication <= i < replication + n_reserve),
+                fsync_data=fsync_data)
+        chain = self.node_ids[:replication]
+        reserve = self.node_ids[replication:replication + n_reserve]
+        self.cm.set_chain("/", chain, reserve)
+        self.procs: Dict[str, LibState] = {}
+        self.dead_nodes = set()
+
+    # -- processes -------------------------------------------------------------
+    def open_process(self, proc_id: str, node_id: Optional[str] = None,
+                     subtree: str = "/", chain: Optional[List[str]] = None,
+                     **kw) -> LibState:
+        node_id = node_id or self.cm.chain_for(subtree + "/x")[0]
+        reserves = self.cm.reserves.get("/", [])
+        # reserve replicas sit at the chain tail: they receive every
+        # update via chain replication (paper S3.5)
+        chain = chain or (self.cm.chain_for(subtree + "/x") + reserves)
+        ls = LibState(proc_id, self.sharedfs[node_id], chain, reserves,
+                      mode=kw.pop("mode", self.mode),
+                      log_capacity=kw.pop("log_capacity", self.log_capacity),
+                      dram_capacity=kw.pop("dram_capacity",
+                                           self.dram_capacity),
+                      subtree=subtree, fsync_data=self.fsync_data, **kw)
+        self.procs[proc_id] = ls
+        return ls
+
+    def kill_process(self, ls: LibState) -> None:
+        ls.crash()
+        self.procs.pop(ls.proc_id, None)
+
+    def recover_process_local(self, proc_id: str, node_id: str,
+                              subtree: str = "/") -> LibState:
+        """Process restart on the same node (paper: LibFS recovery)."""
+        chain = self.cm.chain_for(subtree + "/x") + \
+            self.cm.reserves.get("/", [])
+        ls = recover_process(proc_id, self.sharedfs[node_id], chain,
+                             mode=self.mode, subtree=subtree)
+        self.procs[proc_id] = ls
+        return ls
+
+    # -- node failure / recovery --------------------------------------------------
+    def heartbeat_all(self) -> None:
+        for nid in self.node_ids:
+            if nid not in self.dead_nodes:
+                self.cm.heartbeat(nid)
+
+    def kill_node(self, node_id: str) -> None:
+        """Node dies (power loss): DRAM gone, NVM + SSD files survive."""
+        self.dead_nodes.add(node_id)
+        self.transport.set_down(node_id)
+        for pid, ls in list(self.procs.items()):
+            if ls.sfs.node_id == node_id:
+                ls.dram.clear()
+                self.procs.pop(pid)
+
+    def detect_failures(self, timeout: float = 1.0) -> List[str]:
+        return self.cm.check_failures(timeout)
+
+    def detect_failures_now(self) -> List[str]:
+        """Deterministically time out exactly the injected-dead nodes
+        (test/bench convenience; production uses the 1s heartbeat loop)."""
+        self.heartbeat_all()
+        failed = [n for n in self.node_ids
+                  if n in self.dead_nodes and self.cm.nodes[n].alive]
+        for n in failed:
+            self.cm.nodes[n].alive = False
+            self.cm.on_node_failed(n)
+        return failed
+
+    def failover_process(self, proc_id: str, subtree: str = "/") -> LibState:
+        """Restart the app on the first *alive* cache replica. The
+        replica's SharedFS digests the replicated slot — all acked writes
+        are immediately visible (near-instant failover)."""
+        reserves = self.cm.reserves.get("/", [])
+        chain = self.cm.chain_for(subtree + "/x") + reserves
+        target = next(n for n in chain if n not in self.dead_nodes)
+        sfs = self.sharedfs[target]
+        sfs.recover_dead_process(proc_id)
+        ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
+                      subtree=subtree, fsync_data=self.fsync_data)
+        self.procs[proc_id] = ls
+        return ls
+
+    def restart_node(self, node_id: str) -> SharedFS:
+        """Rejoin after failure: rebuild SharedFS from its persistent
+        areas, then invalidate everything written since its epoch."""
+        epoch_at_death = self.sharedfs[node_id].recovered_epoch
+        self.dead_nodes.discard(node_id)
+        self.transport.set_down(node_id, False)
+        sfs = SharedFS(node_id, os.path.join(self.root, node_id), self.cm,
+                       self.transport, hot_capacity=self.hot_capacity,
+                       fsync_data=self.fsync_data)
+        self.sharedfs[node_id] = sfs
+        sfs.invalidate_since(epoch_at_death)
+        self.cm.on_node_recovered(node_id)
+        return sfs
+
+    def close(self) -> None:
+        for ls in list(self.procs.values()):
+            try:
+                ls.close()
+            except Exception:
+                pass
+
+    def destroy(self) -> None:
+        self.close()
+        shutil.rmtree(self.root, ignore_errors=True)

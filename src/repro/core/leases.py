@@ -1,0 +1,123 @@
+"""Hierarchical leases (paper §3.3): linearizable sharing with locality.
+
+Read leases are shared; write leases are exclusive; a *subtree* lease on
+``/a/b`` covers everything under it. Leases expire (fault tolerance) and
+can be revoked with a grace callback that lets the holder flush+digest
+before handing off (exactly the paper's revocation protocol).
+
+Delegation is hierarchical: the ClusterManager assigns a *lease manager*
+(a SharedFS) per subtree; LibState processes acquire from their local
+SharedFS, which forwards to the manager only on first contact — so
+node-local sharing synchronizes without any network traffic.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+READ = "r"
+WRITE = "w"
+
+LEASE_TTL = 5.0  # seconds (logical); matches the paper's 5s migration tick
+_ids = itertools.count(1)
+
+
+def covers(lease_path: str, path: str) -> bool:
+    """Subtree semantics: /a/b covers /a/b and /a/b/c."""
+    if lease_path == path:
+        return True
+    pre = lease_path.rstrip("/") + "/"
+    return path.startswith(pre)
+
+
+def conflicts(a_path: str, a_mode: str, b_path: str, b_mode: str) -> bool:
+    if a_mode == READ and b_mode == READ:
+        return False
+    return covers(a_path, b_path) or covers(b_path, a_path)
+
+
+@dataclass
+class Lease:
+    id: int
+    path: str
+    mode: str
+    holder: str  # process or node id
+    expires_at: float
+
+    def valid(self, now: float) -> bool:
+        return now < self.expires_at
+
+
+@dataclass
+class LeaseTable:
+    """Grant table with conflict detection + expiry."""
+
+    leases: Dict[int, Lease] = field(default_factory=dict)
+
+    def expire(self, now: float) -> List[Lease]:
+        dead = [l for l in self.leases.values() if not l.valid(now)]
+        for l in dead:
+            del self.leases[l.id]
+        return dead
+
+    def conflicting(self, path: str, mode: str, now: float,
+                    exclude_holder: Optional[str] = None) -> List[Lease]:
+        self.expire(now)
+        return [l for l in self.leases.values()
+                if l.holder != exclude_holder
+                and conflicts(l.path, l.mode, path, mode)]
+
+    def find(self, holder: str, path: str, mode: str, now: float):
+        for l in self.leases.values():
+            if (l.holder == holder and l.valid(now) and covers(l.path, path)
+                    and (l.mode == WRITE or mode == READ)):
+                return l
+        return None
+
+    def grant(self, path: str, mode: str, holder: str, now: float,
+              ttl: float = LEASE_TTL) -> Lease:
+        l = Lease(next(_ids), path, mode, holder, now + ttl)
+        self.leases[l.id] = l
+        return l
+
+    def release(self, lease_id: int) -> None:
+        self.leases.pop(lease_id, None)
+
+    def release_holder(self, holder: str) -> int:
+        ids = [i for i, l in self.leases.items() if l.holder == holder]
+        for i in ids:
+            del self.leases[i]
+        return len(ids)
+
+
+class LeaseManager:
+    """Per-SharedFS lease manager for the subtrees it has been delegated.
+
+    ``revoke_cb(holder, path)`` is invoked to make a holder flush
+    (replicate + digest) and drop leases before a conflicting grant — the
+    paper's grace-period handoff.
+    """
+
+    def __init__(self, owner_id: str,
+                 revoke_cb: Callable[[str, str], None]):
+        self.owner_id = owner_id
+        self.table = LeaseTable()
+        self.revoke_cb = revoke_cb
+        self.transfers = 0  # lease handoffs (logged; paper: replicated)
+
+    def acquire(self, holder: str, path: str, mode: str, now: float,
+                ttl: float = LEASE_TTL) -> Lease:
+        existing = self.table.find(holder, path, mode, now)
+        if existing is not None:
+            existing.expires_at = now + ttl  # refresh
+            return existing
+        for l in self.table.conflicting(path, mode, now,
+                                        exclude_holder=holder):
+            self.revoke_cb(l.holder, l.path)  # grace: flush + handoff
+            self.table.release(l.id)
+            self.transfers += 1
+        return self.table.grant(path, mode, holder, now, ttl)
+
+    def release_all(self, holder: str) -> int:
+        return self.table.release_holder(holder)

@@ -1,0 +1,215 @@
+"""Operation-granularity persistent update log (the heart of CC-NVM).
+
+Every mutating operation is appended *at its own granularity* — no block
+rounding, no write amplification for small IO (paper §3.3). The log file
+is the process's "NVM" region: entries carry a CRC and a strictly
+increasing seqno, so replay after a crash recovers exactly the maximal
+verifiable **prefix** of the write history (prefix semantics), stopping
+at the first torn/corrupt record.
+
+``coalesce`` implements the optimistic-mode redundant-write elimination
+(paper §3.3 / Strata): superseded PUTs to the same path are dropped when
+no intervening rename/delete touches that path.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional
+
+MAGIC = 0xA551_5E00
+OP_PUT = 1
+OP_DELETE = 2
+OP_RENAME = 3
+OP_TXN = 4  # transaction barrier wrapping a coalesced replication batch
+
+_HDR = struct.Struct("<IQBHIi")  # magic, seqno, op, path_len, data_len, crc
+
+
+@dataclass(frozen=True)
+class Entry:
+    seqno: int
+    op: int
+    path: str
+    data: bytes
+
+    def encode(self) -> bytes:
+        p = self.path.encode()
+        crc = zlib.crc32(p + self.data) & 0x7FFFFFFF
+        return _HDR.pack(MAGIC, self.seqno, self.op, len(p), len(self.data),
+                         crc) + p + self.data
+
+    @property
+    def nbytes(self) -> int:
+        return _HDR.size + len(self.path.encode()) + len(self.data)
+
+
+def decode_stream(buf: bytes) -> List[Entry]:
+    """Decode entries, stopping at the first corrupt/torn record (prefix)."""
+    out, off = [], 0
+    n = len(buf)
+    while off + _HDR.size <= n:
+        magic, seqno, op, plen, dlen, crc = _HDR.unpack_from(buf, off)
+        if magic != MAGIC:
+            break
+        end = off + _HDR.size + plen + dlen
+        if end > n:
+            break  # torn write
+        p = buf[off + _HDR.size: off + _HDR.size + plen]
+        d = buf[off + _HDR.size + plen: end]
+        if (zlib.crc32(p + d) & 0x7FFFFFFF) != crc:
+            break  # corruption: cut the history here
+        out.append(Entry(seqno, op, p.decode(), bytes(d)))
+        off = end
+    return out
+
+
+class UpdateLog:
+    """File-backed, append-only update log with an in-memory index.
+
+    The in-memory ``index`` is the paper's "log hashtable" (Fig. 10):
+    path -> latest value among un-digested entries, for O(1) read hits on
+    recently written data.
+    """
+
+    def __init__(self, path: str, capacity_bytes: int = 1 << 30,
+                 fsync_data: bool = False):
+        self.path = path
+        self.capacity = capacity_bytes
+        self.fsync_data = fsync_data
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._f = open(path, "ab+")
+        self._entries: List[Entry] = []
+        self._next_seq = 1
+        self._base_seq = 0  # all entries <= base_seq have been digested
+        self.index = {}
+        self.bytes = 0
+        self._read_base()
+        self._recover_from_file()
+
+    # -- append path --------------------------------------------------------
+    def append(self, op: int, path: str, data: bytes = b"") -> Entry:
+        e = Entry(self._next_seq, op, path, data)
+        self._next_seq += 1
+        self._f.write(e.encode())
+        self._entries.append(e)
+        self.bytes += e.nbytes
+        self._apply_to_index(e)
+        return e
+
+    def persist(self) -> None:
+        """Flush to the persistence domain (CLWB+SFENCE analogue)."""
+        self._f.flush()
+        if self.fsync_data:
+            os.fsync(self._f.fileno())
+
+    def _apply_to_index(self, e: Entry) -> None:
+        if e.op == OP_PUT:
+            self.index[e.path] = e.data
+        elif e.op == OP_DELETE:
+            self.index[e.path] = None  # tombstone: authoritative miss
+        elif e.op == OP_RENAME:
+            dst = e.data.decode()
+            val = self.index.get(e.path)
+            self.index[e.path] = None  # tombstone first: self-rename safe
+            if val is not None:
+                self.index[dst] = val
+
+    # -- read/replication helpers -------------------------------------------
+    @property
+    def last_seqno(self) -> int:
+        return self._entries[-1].seqno if self._entries else self._base_seq
+
+    def entries_since(self, seqno: int) -> List[Entry]:
+        return [e for e in self._entries if e.seqno > seqno]
+
+    @staticmethod
+    def coalesce(entries: Iterable[Entry]) -> List[Entry]:
+        """Drop superseded PUTs (optimistic-mode bandwidth elimination)."""
+        entries = list(entries)
+        keep = [True] * len(entries)
+        last_put = {}  # path -> idx of latest PUT
+        for i, e in enumerate(entries):
+            if e.op == OP_PUT:
+                j = last_put.get(e.path)
+                if j is not None:
+                    keep[j] = False
+                last_put[e.path] = i
+            elif e.op == OP_DELETE:
+                j = last_put.pop(e.path, None)
+                if j is not None:
+                    keep[j] = False  # PUT then DELETE: both redundant? keep
+                    keep[j] = False
+            elif e.op == OP_RENAME:
+                # rename pins prior PUTs of src (they move), clears dst hist
+                last_put.pop(e.path, None)
+                last_put.pop(e.data.decode(), None)
+        return [e for e, k in zip(entries, keep) if k]
+
+    # -- digest / truncate ----------------------------------------------------
+    def _read_base(self) -> None:
+        try:
+            with open(self.path + ".base") as f:
+                self._base_seq = int(f.read().strip() or 0)
+                self._next_seq = self._base_seq + 1
+        except (FileNotFoundError, ValueError):
+            pass
+
+    def _write_base(self) -> None:
+        with open(self.path + ".base", "w") as f:
+            f.write(str(self._base_seq))
+
+    def truncate_through(self, seqno: int) -> None:
+        """Drop entries <= seqno (after digest). Rewrites the backing file.
+        The digested-through seqno is persisted so seqnos stay monotonic
+        across process incarnations (chain slots rely on this)."""
+        self._entries = [e for e in self._entries if e.seqno > seqno]
+        self._base_seq = max(self._base_seq, seqno)
+        self._write_base()
+        self._f.close()
+        with open(self.path, "wb") as f:
+            for e in self._entries:
+                f.write(e.encode())
+        self._f = open(self.path, "ab+")
+        self.bytes = sum(e.nbytes for e in self._entries)
+        self.index = {}
+        for e in self._entries:
+            self._apply_to_index(e)
+
+    @property
+    def full_beyond(self) -> bool:
+        return self.bytes >= self.capacity
+
+    # -- crash recovery --------------------------------------------------------
+    def _recover_from_file(self) -> None:
+        self._f.seek(0)
+        buf = self._f.read()
+        self._entries = decode_stream(buf)
+        self.bytes = sum(e.nbytes for e in self._entries)
+        for e in self._entries:
+            self._apply_to_index(e)
+        if self._entries:
+            self._next_seq = max(self._next_seq,
+                                 self._entries[-1].seqno + 1)
+        # truncate any torn tail so future appends are clean
+        valid = sum(e.nbytes for e in self._entries)
+        if valid < len(buf):
+            self._f.close()
+            with open(self.path, "rb+") as f:
+                f.truncate(valid)
+            self._f = open(self.path, "ab+")
+
+    def replay(self, apply_fn: Callable[[Entry], None],
+               through: Optional[int] = None) -> int:
+        n = 0
+        for e in self._entries:
+            if through is not None and e.seqno > through:
+                break
+            apply_fn(e)
+            n += 1
+        return n
+
+    def close(self):
+        self._f.close()

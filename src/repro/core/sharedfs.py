@@ -1,0 +1,322 @@
+"""SharedFS: per-node daemon — second-level persistent cache, digest,
+eviction, replica slots, lease management, permissions (paper §3).
+
+Tiers on a node:
+  hot shared area   nvm/shared/   (persistent; manifest-logged for recovery)
+  reserve area      nvm/reserve/  (only on reserve replicas)
+  cold storage      ssd/cold/     (LRU eviction target; "disaggregatable")
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core import log as L
+from repro.core.cluster import ClusterManager
+from repro.core.leases import LeaseManager, READ, WRITE
+from repro.core.replication import ReplicaSlot
+
+
+def _fname(path: str) -> str:
+    return hashlib.sha1(path.encode()).hexdigest()
+
+
+class Area:
+    """A persistent path->bytes area backed by files + a manifest log.
+
+    The manifest gives crash recovery: replaying it (prefix semantics —
+    truncated tail lines are dropped) rebuilds the index."""
+
+    def __init__(self, root: str, capacity: int = 1 << 40):
+        self.root = root
+        self.capacity = capacity
+        os.makedirs(root, exist_ok=True)
+        self.manifest_path = os.path.join(root, "MANIFEST")
+        self.index: Dict[str, str] = {}
+        self.sizes: Dict[str, int] = {}
+        self.lru: Dict[str, float] = {}
+        self.bytes = 0
+        self._mf = None
+        self._recover()
+        self._mf = open(self.manifest_path, "a")
+
+    def _recover(self) -> None:
+        if not os.path.exists(self.manifest_path):
+            return
+        with open(self.manifest_path) as f:
+            for line in f:
+                if not line.endswith("\n"):
+                    break  # torn manifest tail
+                parts = line.rstrip("\n").split("\x00")
+                if parts[0] == "put" and len(parts) == 3:
+                    self.index[parts[1]] = parts[2]
+                elif parts[0] == "del" and len(parts) == 2:
+                    self.index.pop(parts[1], None)
+        for p, fn in list(self.index.items()):
+            fp = os.path.join(self.root, fn)
+            if os.path.exists(fp):
+                sz = os.path.getsize(fp)
+                self.sizes[p] = sz
+                self.bytes += sz
+                self.lru[p] = 0.0
+            else:
+                del self.index[p]
+
+    def _log(self, *parts: str) -> None:
+        self._mf.write("\x00".join(parts) + "\n")
+        self._mf.flush()
+
+    def put(self, path: str, data: bytes) -> None:
+        fn = _fname(path)
+        with open(os.path.join(self.root, fn), "wb") as f:
+            f.write(data)
+        if path in self.sizes:
+            self.bytes -= self.sizes[path]
+        self.index[path] = fn
+        self.sizes[path] = len(data)
+        self.bytes += len(data)
+        self.lru[path] = time.monotonic()
+        self._log("put", path, fn)
+
+    def get(self, path: str) -> Optional[bytes]:
+        fn = self.index.get(path)
+        if fn is None:
+            return None
+        self.lru[path] = time.monotonic()
+        with open(os.path.join(self.root, fn), "rb") as f:
+            return f.read()
+
+    def delete(self, path: str) -> None:
+        fn = self.index.pop(path, None)
+        if fn is not None:
+            self.bytes -= self.sizes.pop(path, 0)
+            self.lru.pop(path, None)
+            try:
+                os.remove(os.path.join(self.root, fn))
+            except FileNotFoundError:
+                pass
+            self._log("del", path)
+
+    def rename(self, src: str, dst: str) -> None:
+        fn = self.index.pop(src, None)
+        if fn is None:
+            return
+        self.index[dst] = fn
+        self.sizes[dst] = self.sizes.pop(src, 0)
+        self.lru[dst] = time.monotonic()
+        self._log("del", src)
+        self._log("put", dst, fn)
+
+    def contains(self, path: str) -> bool:
+        return path in self.index
+
+    def paths(self):
+        return list(self.index)
+
+    def lru_victims(self, need_bytes: int) -> List[str]:
+        out, freed = [], 0
+        for p in sorted(self.lru, key=self.lru.get):
+            out.append(p)
+            freed += self.sizes.get(p, 0)
+            if self.bytes - freed <= self.capacity - need_bytes:
+                break
+        return out
+
+
+class SharedFS:
+    """Per-node daemon. Registered as the node's transport endpoint."""
+
+    def __init__(self, node_id: str, root_dir: str, cluster: ClusterManager,
+                 transport, *, hot_capacity: int = 1 << 30,
+                 is_reserve: bool = False, fsync_data: bool = False):
+        self.node_id = node_id
+        self.root = root_dir
+        self.cluster = cluster
+        self.transport = transport
+        self.is_reserve = is_reserve
+        self.fsync_data = fsync_data
+        area_name = "reserve" if is_reserve else "shared"
+        self.hot = Area(os.path.join(root_dir, "nvm", area_name),
+                        hot_capacity)
+        self.cold = Area(os.path.join(root_dir, "ssd", "cold"))
+        self.slots: Dict[str, ReplicaSlot] = {}
+        self.lease_mgr = LeaseManager(node_id, self._revoke_holder)
+        self.local_procs: Dict[str, object] = {}  # proc_id -> LibState
+        self.permissions: Dict[str, tuple] = {}  # prefix -> (read, write)
+        self.recovered_epoch = 0
+        self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
+                      "invalidated": 0}
+        transport.register_endpoint(node_id, self)
+
+    # -- permissions (single administrative domain, paper §3.2) -------------
+    def set_permission(self, prefix: str, read: bool = True,
+                       write: bool = True) -> None:
+        self.permissions[prefix] = (read, write)
+
+    def check_permission(self, path: str, mode: str) -> bool:
+        best, decision = -1, (True, True)
+        for pre, rw in self.permissions.items():
+            if (path == pre or path.startswith(pre.rstrip("/") + "/")) \
+                    and len(pre) > best:
+                best, decision = len(pre), rw
+        return decision[0] if mode == READ else decision[1]
+
+    # -- replica slots (chain replication target) ----------------------------
+    def slot_for(self, proc_id: str) -> ReplicaSlot:
+        if proc_id not in self.slots:
+            slot = ReplicaSlot(os.path.join(self.root, "nvm", "repl",
+                                            f"{proc_id}.log"),
+                               self.fsync_data)
+            self.slots[proc_id] = slot
+            self.transport.register_region(self.node_id, f"slot/{proc_id}",
+                                           slot)
+        return self.slots[proc_id]
+
+    def ensure_slot(self, proc_id: str) -> None:
+        self.slot_for(proc_id)
+
+    def chain_continue(self, proc_id: str, data: bytes,
+                       rest: List[str]) -> int:
+        """RPC: continue chain replication; ack = last seqno seen."""
+        slot = self.slot_for(proc_id)
+        if not slot.entries or slot.entries[-1].seqno < \
+                (L.decode_stream(data)[-1].seqno if data else 0):
+            # One-sided write may already have landed (writer wrote to us
+            # directly as chain head). Idempotent append if not.
+            have = {e.seqno for e in slot.entries}
+            for e in L.decode_stream(data):
+                if e.seqno not in have:
+                    slot.write(None, e.encode())
+        if rest:
+            head, tail = rest[0], rest[1:]
+            self.transport.one_sided_write(head, f"slot/{proc_id}", data)
+            return self.transport.rpc(head, "chain_continue", proc_id, data,
+                                      tail)
+        return slot.acked_seqno
+
+    # -- digest / eviction (paper §A.1) ----------------------------------------
+    def digest_slot(self, proc_id: str, through_seqno: int) -> int:
+        """Apply a process's replicated log prefix into the hot area."""
+        slot = self.slot_for(proc_id)
+        applied = 0
+        for e in slot.entries:
+            if e.seqno > through_seqno:
+                break
+            self._apply_entry(e)
+            applied += 1
+        slot.truncate_through(through_seqno)
+        self.stats["digests"] += 1
+        self._evict_if_needed()
+        return applied
+
+    def digest_entries(self, entries: List[L.Entry]) -> int:
+        for e in entries:
+            self._apply_entry(e)
+        self.stats["digests"] += 1
+        self._evict_if_needed()
+        return len(entries)
+
+    def _apply_entry(self, e: L.Entry) -> None:
+        if e.op == L.OP_PUT:
+            self.hot.put(e.path, e.data)
+        elif e.op == L.OP_DELETE:
+            self.hot.delete(e.path)
+            self.cold.delete(e.path)
+        elif e.op == L.OP_RENAME:
+            dst = e.data.decode()
+            if self.hot.contains(e.path):
+                self.hot.rename(e.path, dst)
+            elif self.cold.contains(e.path):
+                data = self.cold.get(e.path)
+                self.cold.delete(e.path)
+                self.hot.put(dst, data)
+        self.cluster.mark_dirty(e.path if e.op != L.OP_RENAME
+                                else e.data.decode())
+
+    def _evict_if_needed(self) -> None:
+        if self.hot.bytes <= self.hot.capacity:
+            return
+        for p in self.hot.lru_victims(0):
+            data = self.hot.get(p)
+            if data is not None:
+                self.cold.put(p, data)
+            self.hot.delete(p)
+            self.stats["evictions"] += 1
+            if self.hot.bytes <= self.hot.capacity:
+                break
+
+    # -- reads ------------------------------------------------------------------
+    def read(self, path: str) -> Optional[bytes]:
+        """L2 read (RPC-able): hot area only."""
+        return self.hot.get(path)
+
+    def read_any(self, path: str) -> Optional[bytes]:
+        """Undigested replica slots first (freshest), then hot, then cold.
+        Slot tombstones (None) are authoritative misses."""
+        for slot in self.slots.values():
+            if path in slot.mirror:
+                return slot.mirror[path]  # may be a tombstone (None)
+        v = self.hot.get(path)
+        if v is not None:
+            return v
+        return self.cold.get(path)
+
+    def read_remote(self, path: str) -> Optional[bytes]:
+        self.stats["remote_reads"] += 1
+        return self.read_any(path)
+
+    # -- leases -------------------------------------------------------------------
+    def lease_acquire(self, holder: str, path: str, mode: str,
+                      subtree: str = "/") -> bool:
+        if not self.check_permission(path, mode):
+            raise PermissionError(f"{holder}: {mode} {path}")
+        mgr_node = self.cluster.manager_for(subtree, self.node_id)
+        now = self.cluster.clock()
+        if mgr_node == self.node_id:
+            self.lease_mgr.acquire(holder, path, mode, now)
+            return True
+        return self.transport.rpc(mgr_node, "lease_acquire_local", holder,
+                                  path, mode)
+
+    def lease_acquire_local(self, holder: str, path: str,
+                            mode: str) -> bool:
+        self.lease_mgr.acquire(holder, path, mode, self.cluster.clock())
+        return True
+
+    def _revoke_holder(self, holder: str, path: str) -> None:
+        """Grace-period revocation: make the holder flush + digest."""
+        proc = self.local_procs.get(holder)
+        if proc is not None:
+            proc.flush_for_revocation()
+
+    # -- process failure (LibFS recovery, paper §3.4) -------------------------------
+    def recover_dead_process(self, proc_id: str) -> int:
+        """Idempotent log-based eviction of a dead process's updates."""
+        slot = self.slots.get(proc_id)
+        applied = 0
+        if slot is not None:
+            applied = self.digest_slot(proc_id, slot.acked_seqno)
+        self.lease_mgr.release_all(proc_id)
+        self.local_procs.pop(proc_id, None)
+        return applied
+
+    # -- epoch-based invalidation on rejoin (paper §3.4) ------------------------------
+    def invalidate_since(self, epoch: int) -> int:
+        dirty = self.cluster.dirty_since(epoch)
+        n = 0
+        for p in dirty:
+            if self.hot.contains(p):
+                self.hot.delete(p)
+                n += 1
+            if self.cold.contains(p):
+                self.cold.delete(p)
+                n += 1
+        self.stats["invalidated"] += n
+        self.recovered_epoch = self.cluster.epoch
+        return n
+
+    def promote_to_cache_replica(self) -> None:
+        """Reserve -> cache replica under cascaded failures (§3.5)."""
+        self.is_reserve = False

@@ -1,0 +1,230 @@
+"""LibState (the LibFS analogue): process-linked client of CC-NVM.
+
+All IO is function calls against process-local state (kernel-bypass
+analogue): writes append to the private update log in "NVM"; reads hit
+the log hashtable, then the process DRAM cache, then the node's SharedFS
+hot area, then remote replicas (reserve first), then cold storage.
+
+Crash-consistency modes (paper §3):
+  pessimistic — fsync() chain-replicates synchronously; acked writes
+                survive any single chain-node loss.
+  optimistic  — fsync() only persists locally; dsync() coalesces (drops
+                superseded updates) and replicates, wrapped in a TXN
+                barrier so replicated batches apply atomically.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import List, Optional
+
+from repro.core import log as L
+from repro.core.leases import READ, WRITE
+from repro.core.log import UpdateLog
+from repro.core.replication import ChainClient
+from repro.core.sharedfs import SharedFS
+
+
+class DramCache:
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self.data = OrderedDict()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, path: str) -> Optional[bytes]:
+        v = self.data.get(path)
+        if v is not None:
+            self.data.move_to_end(path)
+            self.hits += 1
+        else:
+            self.misses += 1
+        return v
+
+    def put(self, path: str, data: bytes) -> None:
+        old = self.data.pop(path, None)
+        if old is not None:
+            self.bytes -= len(old)
+        self.data[path] = data
+        self.bytes += len(data)
+        while self.bytes > self.capacity and self.data:
+            _, v = self.data.popitem(last=False)
+            self.bytes -= len(v)
+
+    def invalidate(self, path: str) -> None:
+        v = self.data.pop(path, None)
+        if v is not None:
+            self.bytes -= len(v)
+
+    def clear(self) -> None:
+        self.data.clear()
+        self.bytes = 0
+
+
+class LibState:
+    def __init__(self, proc_id: str, sharedfs: SharedFS, chain: List[str],
+                 reserves: Optional[List[str]] = None, *,
+                 mode: str = "pessimistic", log_capacity: int = 1 << 30,
+                 dram_capacity: int = 2 << 30, subtree: str = "/",
+                 fsync_data: bool = False):
+        assert mode in ("pessimistic", "optimistic")
+        self.proc_id = proc_id
+        self.sfs = sharedfs
+        self.cluster = sharedfs.cluster
+        self.transport = sharedfs.transport
+        self.mode = mode
+        self.subtree = subtree
+        self.log = UpdateLog(
+            f"{sharedfs.root}/nvm/proc/{proc_id}.log", log_capacity,
+            fsync_data)
+        self.dram = DramCache(dram_capacity)
+        peers = [n for n in chain if n != sharedfs.node_id]
+        self.chain = ChainClient(proc_id, peers, sharedfs.transport)
+        self.reserves = [n for n in (reserves or [])
+                         if n != sharedfs.node_id]
+        for n in peers:
+            sharedfs.transport.rpc(n, "ensure_slot", proc_id)
+        sharedfs.local_procs[proc_id] = self
+        self.digest_threshold = 0.75
+        self.stats = {"puts": 0, "gets": 0, "l1_hits": 0, "l2_hits": 0,
+                      "remote_hits": 0, "cold_hits": 0, "digests": 0,
+                      "coalesced_out": 0}
+
+    # -- leases ---------------------------------------------------------------
+    def _lease(self, path: str, mode: str) -> None:
+        self.sfs.lease_acquire(self.proc_id, path, mode, self.subtree)
+
+    def lease_subtree(self, path: str) -> None:
+        """Acquire an exclusive subtree (directory) lease — e.g. a
+        Maildir before delivering into it (paper §3.3)."""
+        self._lease(path, WRITE)
+
+    # -- write path -------------------------------------------------------------
+    def put(self, path: str, data: bytes) -> None:
+        self._lease(path, WRITE)
+        self.log.append(L.OP_PUT, path, data)
+        self.stats["puts"] += 1
+        self.dram.invalidate(path)
+        if self.log.bytes >= self.digest_threshold * self.log.capacity:
+            self.digest()
+
+    def delete(self, path: str) -> None:
+        self._lease(path, WRITE)
+        self.log.append(L.OP_DELETE, path)
+        self.dram.invalidate(path)
+
+    def rename(self, src: str, dst: str) -> None:
+        self._lease(src, WRITE)
+        self._lease(dst, WRITE)
+        self.log.append(L.OP_RENAME, src, dst.encode())
+        self.dram.invalidate(src)
+        self.dram.invalidate(dst)
+
+    def fsync(self) -> None:
+        self.log.persist()
+        if self.mode == "pessimistic":
+            self._replicate(coalesce=False)
+
+    def dsync(self) -> None:
+        self.log.persist()
+        self._replicate(coalesce=(self.mode == "optimistic"))
+
+    def _replicate(self, coalesce: bool) -> None:
+        pending = self.log.entries_since(self.chain.replicated_seqno)
+        if not pending:
+            return
+        if coalesce:
+            reduced = UpdateLog.coalesce(pending)
+            self.stats["coalesced_out"] += len(pending) - len(reduced)
+            self.chain.replicate(reduced)
+            self.chain.replicated_seqno = pending[-1].seqno
+        else:
+            self.chain.replicate(pending)
+
+    # -- read path ------------------------------------------------------------
+    def get(self, path: str) -> Optional[bytes]:
+        self._lease(path, READ)
+        self.stats["gets"] += 1
+        _miss = object()
+        v = self.log.index.get(path, _miss)  # L1a: log hashtable
+        if v is not _miss:
+            self.stats["l1_hits"] += 1
+            return v  # may be a tombstone (None): authoritative
+        v = self.dram.get(path)  # L1b: process DRAM read cache
+        if v is not None:
+            self.stats["l1_hits"] += 1
+            return v
+        v = self.sfs.read_any(path)  # L2: node-local SharedFS
+        if v is not None:
+            self.stats["l2_hits"] += 1
+            self.dram.put(path, v)
+            return v
+        for nid in self.reserves + self.chain.chain:  # L3: remote NVM
+            try:
+                v = self.transport.rpc(nid, "read_remote", path)
+            except Exception:
+                continue
+            if v is not None:
+                self.stats["remote_hits"] += 1
+                self.dram.put(path, v)
+                return v
+        v = self.sfs.cold.get(path)  # L4: cold storage
+        if v is not None:
+            self.stats["cold_hits"] += 1
+            self.dram.put(path, v)
+        return v
+
+    # -- digest (replicate + apply + truncate) -------------------------------------
+    def digest(self) -> None:
+        self.log.persist()
+        self._replicate(coalesce=(self.mode == "optimistic"))
+        upto = self.log.last_seqno
+        entries = self.log.entries_since(0)
+        self.sfs.digest_entries([e for e in entries if e.seqno <= upto])
+        for nid in self.chain.chain:
+            self.transport.rpc(nid, "digest_slot", self.proc_id, upto)
+        self.log.truncate_through(upto)
+        self.stats["digests"] += 1
+
+    def flush_for_revocation(self) -> None:
+        """Lease revocation grace: replicate + digest so the next holder
+        sees all our updates via its SharedFS."""
+        self.digest()
+
+    # -- lifecycle ---------------------------------------------------------------
+    def crash(self) -> None:
+        """Simulate process death: volatile state is gone; the NVM log and
+        the replicas' slots survive."""
+        self.dram.clear()
+        self.log.close()
+
+    def close(self) -> None:
+        self.digest()
+        self.sfs.lease_mgr.release_all(self.proc_id)
+        self.sfs.local_procs.pop(self.proc_id, None)
+        self.log.close()
+
+
+def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
+                    **kwargs) -> LibState:
+    """LibFS recovery (paper §3.4): digest the dead process's local log
+    (idempotent), release its leases, and hand back a fresh LibState that
+    sees all completed writes."""
+    log_path = f"{sharedfs.root}/nvm/proc/{proc_id}.log"
+    tmp = UpdateLog(log_path, fsync_data=False)
+    entries = tmp.entries_since(0)
+    if entries:
+        sharedfs.digest_entries(entries)
+    upto = tmp.last_seqno
+    tmp.truncate_through(upto)
+    tmp.close()
+    # keep chain replicas in lockstep (their slots digest the same prefix)
+    for nid in chain:
+        if nid != sharedfs.node_id:
+            try:
+                sharedfs.transport.rpc(nid, "digest_slot", proc_id, upto)
+            except Exception:
+                pass  # dead replica: chain repair handles it
+    sharedfs.lease_mgr.release_all(proc_id)
+    return LibState(proc_id, sharedfs, chain, **kwargs)

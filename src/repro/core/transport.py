@@ -1,0 +1,119 @@
+"""RDMA-like transport between simulated nodes.
+
+The container has no NICs; nodes live in one process and the transport
+preserves the *semantics* Assise relies on:
+
+- **ordered one-sided writes** into registered remote memory regions
+  (RDMA RC ordering — what CC-NVM's prefix guarantee builds on),
+- **RPCs** that invoke a remote endpoint method,
+- failure injection: a dead node's endpoints raise ``NodeDown``,
+- full accounting (ops, bytes, hops) so benchmarks can report both the
+  measured Python time and a modeled wire time
+  (``bytes / NET_BW + hops * NET_LAT``) — see benchmarks/common.py.
+
+Swapping this class for a real ICI/DCN transport changes no caller code.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+
+class NodeDown(RuntimeError):
+    pass
+
+
+# Modeled wire constants (Table 1: NVM-RDMA): 3us read / 8us write RPC,
+# ~3.8 GB/s line rate. Used by benchmarks for modeled latency only.
+NET_LAT_READ_S = 3e-6
+NET_LAT_WRITE_S = 8e-6
+NET_BW_BPS = 3.8e9
+
+
+@dataclass
+class TransportStats:
+    rpcs: int = 0
+    one_sided_writes: int = 0
+    bytes_sent: int = 0
+    bytes_read: int = 0
+    per_node: dict = field(default_factory=dict)
+
+    def account(self, dst, nbytes, kind):
+        e = self.per_node.setdefault(dst, {"rpcs": 0, "writes": 0,
+                                           "bytes": 0})
+        e["bytes"] += nbytes
+        if kind == "rpc":
+            self.rpcs += 1
+            e["rpcs"] += 1
+        else:
+            self.one_sided_writes += 1
+            e["writes"] += 1
+        self.bytes_sent += nbytes
+
+    def modeled_wire_s(self) -> float:
+        return (self.bytes_sent / NET_BW_BPS
+                + self.rpcs * NET_LAT_WRITE_S
+                + self.one_sided_writes * NET_LAT_WRITE_S)
+
+
+class Transport:
+    """In-process transport with endpoint registry and failure injection."""
+
+    def __init__(self):
+        self._endpoints = {}
+        self._regions = {}
+        self._down = set()
+        self._lock = threading.RLock()
+        self.stats = TransportStats()
+
+    # -- membership -------------------------------------------------------
+    def register_endpoint(self, node_id: str, obj) -> None:
+        with self._lock:
+            self._endpoints[node_id] = obj
+            self._down.discard(node_id)
+
+    def set_down(self, node_id: str, down: bool = True) -> None:
+        with self._lock:
+            if down:
+                self._down.add(node_id)
+            else:
+                self._down.discard(node_id)
+
+    def is_down(self, node_id: str) -> bool:
+        return node_id in self._down
+
+    def _check(self, node_id: str):
+        if node_id in self._down:
+            raise NodeDown(node_id)
+        if node_id not in self._endpoints:
+            raise NodeDown(f"{node_id} (unregistered)")
+
+    # -- RPC ---------------------------------------------------------------
+    def rpc(self, dst: str, method: str, *args, **kwargs):
+        self._check(dst)
+        nbytes = sum(len(a) for a in args if isinstance(a, (bytes,
+                                                            bytearray)))
+        self.stats.account(dst, nbytes + 64, "rpc")  # 64B header model
+        return getattr(self._endpoints[dst], method)(*args, **kwargs)
+
+    # -- one-sided writes (RDMA WRITE semantics; ordered per (src,dst)) ----
+    def register_region(self, node_id: str, region_id: str, sink) -> None:
+        """sink: object with .write(offset:int|None, data:bytes)."""
+        self._regions[(node_id, region_id)] = sink
+
+    def one_sided_write(self, dst: str, region_id: str, data: bytes,
+                        offset=None) -> None:
+        self._check(dst)
+        sink = self._regions.get((dst, region_id))
+        if sink is None:
+            raise KeyError(f"region {region_id} not registered on {dst}")
+        self.stats.account(dst, len(data), "write")
+        sink.write(offset, data)
+
+    def one_sided_read(self, dst: str, region_id: str, offset: int,
+                       size: int) -> bytes:
+        self._check(dst)
+        sink = self._regions.get((dst, region_id))
+        self.stats.bytes_read += size
+        self.stats.account(dst, 64, "rpc")
+        return sink.read(offset, size)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, PipelineState
+
+__all__ = ["TokenPipeline", "PipelineState"]

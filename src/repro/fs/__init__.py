@@ -1,0 +1,5 @@
+from repro.fs.disagg import DisaggregatedCluster, DisaggClient
+from repro.fs.nocache import NoCacheCluster, NoCacheClient
+
+__all__ = ["DisaggregatedCluster", "DisaggClient", "NoCacheCluster",
+           "NoCacheClient"]

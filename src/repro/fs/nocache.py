@@ -1,0 +1,76 @@
+"""Octopus-like baseline: RDMA to remote NVM but NO client cache and no
+replication — every op crosses the network (the paper's Octopus rows)."""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+from repro.core.transport import Transport
+
+
+class RemoteNVMServer:
+    def __init__(self, node_id: str, root: str, transport: Transport):
+        self.node_id = node_id
+        os.makedirs(root, exist_ok=True)
+        self.data: Dict[str, bytes] = {}
+        transport.register_endpoint(node_id, self)
+
+    def put(self, path: str, data: bytes) -> None:
+        self.data[path] = data
+
+    def get(self, path: str) -> Optional[bytes]:
+        return self.data.get(path)
+
+    def delete(self, path: str) -> None:
+        self.data.pop(path, None)
+
+    def rename(self, src: str, dst: str) -> None:
+        if src in self.data:
+            self.data[dst] = self.data.pop(src)
+
+
+class NoCacheClient:
+    def __init__(self, proc_id: str, cluster: "NoCacheCluster"):
+        self.proc_id = proc_id
+        self.c = cluster
+        self.stats = {"puts": 0, "gets": 0}
+
+    def _server_for(self, path: str) -> str:
+        # distributed hashing over storage nodes (like Octopus)
+        idx = hash(path) % len(self.c.servers)
+        return self.c.servers[idx].node_id
+
+    def put(self, path: str, data: bytes) -> None:
+        self.stats["puts"] += 1
+        self.c.transport.rpc(self._server_for(path), "put", path, data)
+
+    def get(self, path: str) -> Optional[bytes]:
+        self.stats["gets"] += 1
+        return self.c.transport.rpc(self._server_for(path), "get", path)
+
+    def rename(self, src: str, dst: str) -> None:
+        data = self.get(src)
+        if data is None:
+            return
+        self.c.transport.rpc(self._server_for(src), "delete", src)
+        self.put(dst, data)
+
+    def delete(self, path: str) -> None:
+        self.c.transport.rpc(self._server_for(path), "delete", path)
+
+    def fsync(self) -> None:  # Octopus fsync is a no-op (paper §5.2)
+        pass
+
+    dsync = fsync
+
+
+class NoCacheCluster:
+    def __init__(self, root_dir: str, n_servers: int = 2):
+        self.transport = Transport()
+        self.servers = [RemoteNVMServer(f"nvm{i}",
+                                        os.path.join(root_dir, f"nvm{i}"),
+                                        self.transport)
+                        for i in range(n_servers)]
+
+    def open_client(self, proc_id: str) -> NoCacheClient:
+        return NoCacheClient(proc_id, self)

@@ -1,0 +1,48 @@
+"""Changed-block scan Pallas kernel (TPU target) — checkpoint delta
+encoding on-device.
+
+The Assise-layer redundant-write elimination needs a changed-block bitmap
+over each parameter shard *before* D2H transfer (ckpt/delta.py packs on
+the host). The scan is pure memory bandwidth: read 2x shard bytes, write
+n_blocks flags. Tiles of `bpt` blocks stream through VMEM.
+
+Grid: (n_blocks / bpt,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _delta_kernel(new_ref, old_ref, mask_ref):
+    diff = (new_ref[0] != old_ref[0])  # (bpt, block)
+    mask_ref[0] = jnp.any(diff, axis=1).astype(jnp.int8)
+
+
+def delta_mask(new, old, *, block: int = 2048, bpt: int = 8,
+               interpret: bool = False):
+    """new, old: 1-D arrays of equal length (len % (block*bpt) == 0).
+
+    Returns int8 mask of length n_blocks (1 = block changed)."""
+    assert new.shape == old.shape and new.ndim == 1
+    n = new.shape[0]
+    assert n % (block * bpt) == 0, (n, block, bpt)
+    n_blocks = n // block
+    tiles = n_blocks // bpt
+    nf = new.reshape(tiles, bpt, block)
+    of = old.reshape(tiles, bpt, block)
+    mask = pl.pallas_call(
+        _delta_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, bpt, block), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bpt, block), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bpt), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, bpt), jnp.int8),
+        interpret=interpret,
+    )(nf, of)
+    return mask.reshape(n_blocks)

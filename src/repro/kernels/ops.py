@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python — correctness only); on TPU set interpret=False for
+the compiled path. ``auto_interpret()`` picks based on the backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+from repro.kernels.delta_encode import delta_mask as _delta
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128,
+                    blk_k=128, interpret=None):
+    interpret = auto_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, blk_q=blk_q,
+                  blk_k=blk_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("blk_d", "blk_s", "interpret"))
+def ssm_scan(decay, u, c, state0, *, blk_d=256, blk_s=256, interpret=None):
+    interpret = auto_interpret() if interpret is None else interpret
+    return _ssm(decay, u, c, state0, blk_d=blk_d, blk_s=blk_s,
+                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block", "bpt", "interpret"))
+def delta_mask(new, old, *, block=2048, bpt=8, interpret=None):
+    interpret = auto_interpret() if interpret is None else interpret
+    return _delta(new, old, block=block, bpt=bpt, interpret=interpret)
+
+
+def delta_pack(new, mask, block: int):
+    """Host-side companion to delta_mask: gather changed blocks.
+
+    Returns (indices (k,), blocks (k, block)) as numpy arrays."""
+    import numpy as np
+    new = np.asarray(new).reshape(-1, block)
+    idx = np.nonzero(np.asarray(mask, bool))[0]
+    return idx, new[idx]

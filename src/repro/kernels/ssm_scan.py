@@ -1,0 +1,88 @@
+"""Selective-scan (Mamba recurrence) Pallas kernel (TPU target).
+
+The pure-jnp path materializes the (B, S, D, N) decay/contribution
+tensors several times through the associative scan — the dominant memory
+term of the Jamba cells (EXPERIMENTS.md §Roofline). This kernel keeps the
+running state (blk_d, N) resident in VMEM scratch across sequence tiles
+and streams decay/u/c through VMEM exactly once: HBM traffic drops to
+the size of the inputs + outputs.
+
+Grid: (B, D/blk_d, S/blk_s) with the sequence dimension iterated last
+(sequentially on TPU), so the scratch state carries across S tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu only needed for compiled runs; interpret works without
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape, dtype: pltpu.VMEM(shape, dtype)
+except Exception:  # pragma: no cover
+    _SCRATCH = None
+
+
+def _ssm_kernel(decay_ref, u_ref, c_ref, s0_ref, y_ref, fin_ref, state,
+                *, blk_s, n_sblk):
+    sblk = pl.program_id(2)
+
+    @pl.when(sblk == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    def body(t, _):
+        d_t = decay_ref[0, t].astype(jnp.float32)  # (blk_d, N)
+        u_t = u_ref[0, t].astype(jnp.float32)
+        s = state[...] * d_t + u_t
+        state[...] = s
+        c_t = c_ref[0, t].astype(jnp.float32)  # (N,)
+        y = (s * c_t[None, :]).sum(axis=-1)  # (blk_d,)
+        pl.store(y_ref, (0, pl.ds(t, 1), slice(None)),
+                 y[None, :].astype(y_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, blk_s, body, 0)
+
+    @pl.when(sblk == n_sblk - 1)
+    def _fin():
+        fin_ref[0] = state[...].astype(fin_ref.dtype)
+
+
+def ssm_scan(decay, u, c, state0, *, blk_d: int = 256, blk_s: int = 256,
+             interpret: bool = False):
+    """decay,u: (B,S,D,N); c: (B,S,N); state0: (B,D,N).
+
+    Returns (y: (B,S,D) f32, final_state: (B,D,N) f32)."""
+    b, s, d, n = decay.shape
+    blk_d = min(blk_d, d)
+    blk_s = min(blk_s, s)
+    assert d % blk_d == 0 and s % blk_s == 0, (d, blk_d, s, blk_s)
+    n_sblk = s // blk_s
+    kernel = functools.partial(_ssm_kernel, blk_s=blk_s, n_sblk=n_sblk)
+    grid = (b, d // blk_d, n_sblk)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_s, blk_d, n),
+                         lambda i, j, t: (i, t, j, 0)),
+            pl.BlockSpec((1, blk_s, blk_d, n),
+                         lambda i, j, t: (i, t, j, 0)),
+            pl.BlockSpec((1, blk_s, n), lambda i, j, t: (i, t, 0)),
+            pl.BlockSpec((1, blk_d, n), lambda i, j, t: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_s, blk_d), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, blk_d, n), lambda i, j, t: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+        ],
+        scratch_shapes=[_SCRATCH((blk_d, n), jnp.float32)],
+        interpret=interpret,
+    )(decay, u, c, state0)
+    return y, fin

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Single-pod: 16x16 = 256 chips (data, model).
+Multi-pod: 2x16x16 = 512 chips (pod, data, model).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > n:  # e.g. single-pod mesh in a 512-device dry run
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devices)} — "
+        "run under launch/dryrun.py (it forces 512 host devices)")
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many real devices exist (tests/examples)."""
+    devices = jax.devices()[: data * model]
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

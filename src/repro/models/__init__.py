@@ -1,0 +1,6 @@
+from repro.models.transformer import (Model, RunConfig, init_params,
+                                      init_cache, count_params,
+                                      count_active_params)
+
+__all__ = ["Model", "RunConfig", "init_params", "init_cache", "count_params",
+           "count_active_params"]

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with scatter/gather capacity dispatch.
+
+Design notes (roofline-driven):
+- Dispatch/combine use cumsum + scatter-add / gather, NOT one-hot einsums.
+  One-hot dispatch matmuls cost 2·T·E·C·d FLOPs (~100x the expert FLOPs at
+  assigned shapes); scatter dispatch costs only O(T·k·d) bytes. This keeps
+  HLO_FLOPs ~= active-param FLOPs (MODEL_FLOPS ratio stays honest).
+- Routing is *grouped*: tokens are dispatched within independent groups
+  (one sequence per group for train/prefill; small token groups for
+  decode), so the dispatch cumsum never crosses the data-parallel axis —
+  no cross-device scatter.
+- Expert weights are sharded over the `model` mesh axis (EP); the grouped
+  buffer is sharding-constrained to match, which the SPMD partitioner
+  turns into the all-to-all-equivalent resharding.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.models.layers import act_fn, apply_mlp, init_mlp, normal_init
+
+Array = jax.Array
+
+
+def init_moe(key, d_model: int, spec: MoESpec, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = spec.n_experts, spec.d_expert
+    p = {
+        "router": normal_init(ks[0], (d_model, e), dtype),
+        "w_gate": normal_init(ks[1], (e, d_model, f), dtype),
+        "w_up": normal_init(ks[2], (e, d_model, f), dtype),
+        "w_down": normal_init(ks[3], (e, f, d_model), dtype),
+    }
+    if spec.n_shared:
+        p["shared"] = init_mlp(ks[4], d_model, spec.n_shared * f, act, dtype)
+    return p
+
+
+def _capacity(group_size: int, spec: MoESpec, factor: float) -> int:
+    c = int(group_size * spec.top_k * factor / spec.n_experts) + 1
+    return max(1, min(c, group_size * spec.top_k))
+
+
+def _route_group(xg: Array, logits: Array, spec: MoESpec, capacity: int):
+    """Dispatch one group. xg:(Sg,d), logits:(Sg,E).
+
+    Returns (buffer (E*C+1, d), slot (Sg*k,), gates (Sg*k,), aux).
+    Slot E*C is the overflow sentinel row (dropped tokens).
+    """
+    sg, d = xg.shape
+    e, k = spec.n_experts, spec.top_k
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (Sg,k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(sg * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)  # (Sg*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive count per expert
+    mypos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    mypos = mypos.astype(jnp.int32)
+    keep = mypos < capacity
+    slot = jnp.where(keep, flat_e * capacity + mypos, e * capacity)
+
+    x_rep = jnp.repeat(xg, k, axis=0)  # (Sg*k, d)
+    buf = jnp.zeros((e * capacity + 1, d), xg.dtype).at[slot].add(x_rep)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    frac = onehot.sum(0) / (sg * k)
+    mean_p = probs.mean(0)
+    aux = e * jnp.sum(frac * mean_p)
+    return buf, slot, gates.reshape(sg * k), aux
+
+
+def apply_moe(params: dict, x: Array, spec: MoESpec, act: str, *,
+              n_groups: int, capacity_factor: float = 1.25,
+              shard: Optional[Callable] = None):
+    """x: (B, S, d) -> (out, aux_loss). Groups = reshaped (B*S)/n_groups."""
+    b, s, d = x.shape
+    tokens = b * s
+    assert tokens % n_groups == 0, (tokens, n_groups)
+    sg = tokens // n_groups
+    e, cap = spec.n_experts, _capacity(tokens // n_groups, spec,
+                                       capacity_factor)
+    xg = x.reshape(n_groups, sg, d)
+    logits = xg @ params["router"].astype(xg.dtype)
+
+    buf, slot, gates, aux = jax.vmap(
+        lambda xx, ll: _route_group(xx, ll, spec, cap))(xg, logits)
+    expert_in = buf[:, :-1].reshape(n_groups, e, cap, d)
+    if shard is not None:  # reshard: experts onto the `model` axis (EP)
+        expert_in = shard(expert_in, ("data", "model", None, None))
+
+    gate_w = params["w_gate"].astype(x.dtype)
+    up_w = params["w_up"].astype(x.dtype)
+    down_w = params["w_down"].astype(x.dtype)
+    hg = jnp.einsum("gecd,edf->gecf", expert_in, gate_w)
+    hu = jnp.einsum("gecd,edf->gecf", expert_in, up_w)
+    inner = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[act]
+    h = inner(hg.astype(jnp.float32)).astype(x.dtype) * hu
+    out_buf = jnp.einsum("gecf,efd->gecd", h, down_w)
+    if shard is not None:  # back to token layout (replicated over model)
+        out_buf = shard(out_buf, ("data", None, None, None))
+
+    out_flat = out_buf.reshape(n_groups, e * cap, d)
+    zero_row = jnp.zeros((n_groups, 1, d), x.dtype)
+    out_flat = jnp.concatenate([out_flat, zero_row], axis=1)  # sentinel row
+    gathered = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    y = (gathered * gates[..., None].astype(x.dtype)).reshape(
+        n_groups, sg, spec.top_k, d).sum(axis=2)
+    y = y.reshape(b, s, d)
+
+    if spec.n_shared:
+        y = y + apply_mlp(params["shared"], x, act)
+    return y, aux.mean()
+
+
+def default_groups(batch: int, seq: int, mode: str) -> int:
+    """Dispatch-group policy: per-sequence groups for train/prefill; ~16-token
+    groups for decode (keeps capacity-padding waste bounded)."""
+    if mode == "decode" or seq == 1:
+        return max(1, batch // 16)
+    return batch

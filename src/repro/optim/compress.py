@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Assise-inspired: the paper's optimistic mode eliminates redundant bytes on
+the replication path (coalescing). The training analogue we ship is int8
+block-quantized gradient exchange with error feedback: gradients are
+quantized per block before the DP all-reduce and the quantization residual
+is carried to the next step (so the *prefix* of applied updates stays
+unbiased, matching the paper's prefix-consistency flavor).
+
+In the dry-run, compression changes the collective term (bf16/f32 -> int8
+wire format); in the loss-convergence smoke tests it must stay within
+tolerance of the uncompressed baseline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    block: int = 256  # quantization block size
+    dtype: str = "int8"
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_leaf(g, err, block):
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(g.shape)
+    new_err = gf - deq
+    return q, scale.astype(jnp.float32), new_err, g.shape
+
+
+def compress_grads(grads, err_state, cfg: CompressionConfig):
+    """Returns (wire_tree {q,scale}, new_err_state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(err_state)
+    qs, scales, new_errs = [], [], []
+    for g, e in zip(leaves, errs):
+        q, s, ne, _ = _quant_leaf(g, e, cfg.block)
+        qs.append(q)
+        scales.append(s)
+        new_errs.append(ne)
+    wire = {"q": jax.tree.unflatten(treedef, qs),
+            "scale": jax.tree.unflatten(treedef, scales)}
+    return wire, jax.tree.unflatten(treedef, new_errs)
+
+
+def decompress_grads(wire, shapes_like):
+    def deq(q, s, ref):
+        flat = (q.astype(jnp.float32) * s).reshape(-1)
+        n = 1
+        for d in ref.shape:
+            n *= d
+        return flat[:n].reshape(ref.shape).astype(jnp.float32)
+    return jax.tree.map(deq, wire["q"], wire["scale"], shapes_like)

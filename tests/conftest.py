@@ -1,0 +1,21 @@
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture()
+def tmp_cluster(tmp_path):
+    from repro.core import AssiseCluster
+    c = AssiseCluster(str(tmp_path / "cluster"), n_nodes=4, replication=2,
+                      n_reserve=1)
+    yield c
+    c.close()
+
+
+@pytest.fixture(scope="session")
+def small_rc():
+    from repro.models.transformer import RunConfig
+    return RunConfig(chunk_q=32, chunk_kv=32, mamba_chunk=16, rwkv_chunk=16,
+                     loss_chunk=64, param_dtype=jnp.float32,
+                     cache_dtype=jnp.float32)

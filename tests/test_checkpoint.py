@@ -1,0 +1,93 @@
+"""AssiseCheckpointer: roundtrip, deltas, failover restore, GC."""
+import numpy as np
+import pytest
+
+from repro.ckpt import AssiseCheckpointer, CheckpointConfig
+from repro.ckpt.checkpoint import unflatten_into
+
+
+def _state(seed, n=5):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w1": rng.standard_normal((8, 8)).astype(np.float32),
+                       "w2": rng.standard_normal((16,)).astype(np.float32)},
+            "opt": {"m": [rng.standard_normal((8, 8)).astype(np.float32)],
+                    "step": np.int32(n)}}
+
+
+def test_roundtrip(tmp_cluster):
+    store = tmp_cluster.open_process("t1")
+    ck = AssiseCheckpointer(store, CheckpointConfig(delta=False))
+    st = _state(0)
+    ck.save(3, st, extra={"note": "hi"})
+    flat, man = ck.restore()
+    assert man["step"] == 3 and man["extra"]["note"] == "hi"
+    out = unflatten_into(st, flat)
+    np.testing.assert_array_equal(out["params"]["w1"], st["params"]["w1"])
+    np.testing.assert_array_equal(out["opt"]["m"][0], st["opt"]["m"][0])
+
+
+def test_delta_checkpoints_save_bytes(tmp_cluster):
+    store = tmp_cluster.open_process("t2")
+    ck = AssiseCheckpointer(store, CheckpointConfig(delta=True,
+                                                    delta_block=64))
+    st = _state(1)
+    ck.save(0, st)
+    full0 = ck.stats["bytes_logged"]
+    st["params"]["w2"] = st["params"]["w2"] + 0  # unchanged
+    st["params"]["w1"] = st["params"]["w1"].copy()
+    st["params"]["w1"][0, 0] += 1.0  # one block changes
+    ck.save(1, st)
+    assert ck.stats["bytes_logged"] - full0 < full0  # delta < full
+    flat, man = ck.restore(1)
+    out = unflatten_into(st, flat)
+    np.testing.assert_array_equal(out["params"]["w1"], st["params"]["w1"])
+    np.testing.assert_array_equal(out["params"]["w2"], st["params"]["w2"])
+
+
+def test_restore_after_failover(tmp_cluster):
+    store = tmp_cluster.open_process("t3")
+    ck = AssiseCheckpointer(store, CheckpointConfig(mode="pessimistic",
+                                                    delta=False))
+    st = _state(2)
+    ck.save(7, st)
+    tmp_cluster.kill_node(store.sfs.node_id)
+    tmp_cluster.detect_failures_now()
+    store2 = tmp_cluster.failover_process("t3")
+    ck2 = AssiseCheckpointer(store2, CheckpointConfig(delta=False))
+    res = ck2.restore()
+    assert res is not None
+    flat, man = res
+    assert man["step"] == 7
+    out = unflatten_into(st, flat)
+    np.testing.assert_array_equal(out["params"]["w1"], st["params"]["w1"])
+
+
+def test_manifest_is_commit_point(tmp_cluster):
+    """A checkpoint whose manifest never replicated must be invisible
+    after failover (prefix semantics)."""
+    store = tmp_cluster.open_process("t4")
+    ck = AssiseCheckpointer(store, CheckpointConfig(mode="pessimistic",
+                                                    delta=False))
+    ck.save(1, _state(3))
+    # partial second save: write leaves but crash before manifest+fsync
+    st = _state(4)
+    from repro.ckpt.checkpoint import _flatten, _encode_leaf
+    for name, arr in _flatten(st).items():
+        store.put(f"/ckpt/run0/data/2{name}", _encode_leaf(arr))
+    tmp_cluster.kill_node(store.sfs.node_id)
+    tmp_cluster.detect_failures_now()
+    store2 = tmp_cluster.failover_process("t4")
+    ck2 = AssiseCheckpointer(store2, CheckpointConfig(delta=False))
+    flat, man = ck2.restore()
+    assert man["step"] == 1  # the half-written step 2 is invisible
+
+
+def test_async_commit_overlap(tmp_cluster):
+    store = tmp_cluster.open_process("t5")
+    ck = AssiseCheckpointer(store, CheckpointConfig(delta=False,
+                                                    async_commit=True))
+    ck.save(0, _state(5))
+    ck.save(1, _state(6))  # waits for the pending commit internally
+    ck.wait()
+    flat, man = ck.restore()
+    assert man["step"] == 1

@@ -1,0 +1,74 @@
+"""ClusterManager: membership, epochs, chain repair, reserve promotion,
+journal recovery."""
+import time
+
+from repro.core.cluster import ClusterManager
+
+
+def test_heartbeat_failure_detection():
+    t = [0.0]
+    cm = ClusterManager(clock=lambda: t[0])
+    cm.register("n0")
+    cm.register("n1")
+    cm.set_chain("/", ["n0", "n1"])
+    cm.heartbeat("n0")
+    cm.heartbeat("n1")
+    t[0] = 0.5
+    assert cm.check_failures(1.0) == []
+    cm.heartbeat("n1")
+    t[0] = 1.4
+    assert cm.check_failures(1.0) == ["n0"]
+    assert cm.epoch == 1
+    assert cm.chain_for("/x") == ["n1"]
+
+
+def test_reserve_promotion_on_failure():
+    cm = ClusterManager()
+    for n in ("n0", "n1", "n2"):
+        cm.register(n)
+    cm.set_chain("/", ["n0", "n1"], reserve=["n2"])
+    cm.on_node_failed("n0")
+    assert cm.chain_for("/x") == ["n1", "n2"]  # reserve promoted
+    assert cm.reserves["/"] == []
+
+
+def test_epoch_dirty_tracking():
+    cm = ClusterManager()
+    cm.register("n0")
+    cm.mark_dirty("/a")
+    cm.bump_epoch()
+    cm.mark_dirty("/b")
+    assert cm.dirty_since(0) == {"/a", "/b"}
+    assert cm.dirty_since(1) == {"/b"}
+    cm.gc_epochs(1)
+    assert cm.dirty_since(0) == {"/b"}
+
+
+def test_subtree_chain_resolution():
+    cm = ClusterManager()
+    cm.set_chain("/", ["n0", "n1"])
+    cm.set_chain("/hot", ["n2", "n3"])
+    assert cm.chain_for("/hot/x") == ["n2", "n3"]
+    assert cm.chain_for("/cold/x") == ["n0", "n1"]
+
+
+def test_manager_delegation_and_migration():
+    t = [0.0]
+    cm = ClusterManager(clock=lambda: t[0])
+    cm.register("n0")
+    cm.register("n1")
+    assert cm.manager_for("/a", "n0") == "n0"  # first requester wins
+    assert cm.manager_for("/a", "n1") == "n0"  # sticky within TTL
+    t[0] = 6.0  # MANAGER_TTL expired: migrates toward the requester
+    assert cm.manager_for("/a", "n1") == "n1"
+
+
+def test_journal_recovery(tmp_path):
+    p = str(tmp_path / "cm.journal")
+    cm = ClusterManager(p)
+    cm.register("n0")
+    cm.set_chain("/", ["n0", "n1"], reserve=["n2"])
+    cm.bump_epoch()
+    cm2 = ClusterManager(p)
+    assert cm2.subtree_chains["/"] == ["n0", "n1"]
+    assert cm2.epoch == 1

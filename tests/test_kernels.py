@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 128, 64), (2, 3, 256, 64),
+                                     (1, 2, 256, 128), (2, 1, 512, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, h, s, d, dtype):
+    q, k, v = (_mk((b, h, s, d), dtype) for _ in range(3))
+    out = ops.flash_attention(q, k, v, blk_q=64, blk_k=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_flash_attention_window(window):
+    q, k, v = (_mk((1, 2, 256, 64), jnp.float32) for _ in range(3))
+    out = ops.flash_attention(q, k, v, window=window, blk_q=64, blk_k=64,
+                              interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_vdim_differs():
+    q = _mk((1, 2, 128, 64), jnp.float32)
+    k = _mk((1, 2, 128, 64), jnp.float32)
+    v = _mk((1, 2, 128, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, blk_q=64, blk_k=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,d,n", [(1, 64, 32, 8), (2, 128, 64, 16),
+                                     (1, 256, 128, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan(b, s, d, n, dtype):
+    decay = jnp.asarray(RNG.uniform(0.6, 1.0, (b, s, d, n)), dtype)
+    u = _mk((b, s, d, n), dtype) * 0.1
+    c = _mk((b, s, n), dtype)
+    s0 = _mk((b, d, n), jnp.float32)
+    y, fin = ops.ssm_scan(decay, u, c, s0, blk_d=32, blk_s=32,
+                          interpret=True)
+    ye, fe = ref.ssm_scan_ref(decay, u, c, s0)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fe), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("block,bpt", [(256, 4), (2048, 8)])
+def test_delta_mask(block, bpt):
+    n = block * bpt * 4
+    new = RNG.integers(0, 255, n).astype(np.uint8)
+    old = new.copy()
+    old[block + 3] ^= 0xFF  # flip one byte in block 1
+    old[3 * block: 3 * block + 10] ^= 1  # and a run in block 3
+    m = ops.delta_mask(jnp.asarray(new), jnp.asarray(old), block=block,
+                       bpt=bpt, interpret=True)
+    exp, _ = ref.delta_encode_ref(jnp.asarray(new), jnp.asarray(old), block)
+    np.testing.assert_array_equal(np.asarray(m, bool), np.asarray(exp))
+    idx, blocks = ops.delta_pack(new, m, block)
+    assert set(idx.tolist()) == {1, 3}
+    np.testing.assert_array_equal(blocks[0], new[block: 2 * block])
+
+
+def test_delta_mask_identical_is_empty():
+    n = 2048 * 8
+    new = RNG.integers(0, 255, n).astype(np.uint8)
+    m = ops.delta_mask(jnp.asarray(new), jnp.asarray(new), interpret=True)
+    assert int(np.asarray(m).sum()) == 0

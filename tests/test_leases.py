@@ -1,0 +1,58 @@
+"""Lease semantics: subtree coverage, conflicts, expiry, revocation."""
+from repro.core.leases import (LeaseManager, LeaseTable, READ, WRITE,
+                               conflicts, covers)
+
+
+def test_covers_subtree():
+    assert covers("/a/b", "/a/b/c/d")
+    assert covers("/a/b", "/a/b")
+    assert not covers("/a/b", "/a/bc")
+    assert not covers("/a/b/c", "/a/b")
+
+
+def test_conflicts_matrix():
+    assert not conflicts("/a", READ, "/a", READ)
+    assert conflicts("/a", WRITE, "/a", READ)
+    assert conflicts("/a", WRITE, "/a/b", WRITE)
+    assert conflicts("/a/b", READ, "/a", WRITE)
+    assert not conflicts("/a/b", WRITE, "/a/c", WRITE)
+
+
+def test_table_grant_and_expiry():
+    t = LeaseTable()
+    l = t.grant("/a", WRITE, "p1", now=0.0, ttl=5.0)
+    assert t.find("p1", "/a/x", WRITE, now=1.0) is l
+    assert t.find("p1", "/a/x", WRITE, now=6.0) is None
+    assert [x.id for x in t.expire(6.0)] == [l.id]  # reaped exactly once
+    assert t.expire(6.0) == []
+    # re-grant after expiry works for another holder
+    t2 = LeaseTable()
+    t2.grant("/a", WRITE, "p1", now=0.0, ttl=1.0)
+    assert t2.conflicting("/a", WRITE, now=2.0) == []
+
+
+def test_manager_revokes_with_grace():
+    flushed = []
+    m = LeaseManager("n0", lambda holder, path: flushed.append(holder))
+    m.acquire("p1", "/a", WRITE, now=0.0)
+    m.acquire("p2", "/a/b", WRITE, now=1.0)  # conflicts: p1 revoked
+    assert flushed == ["p1"]
+    assert m.transfers == 1
+    # p2 now holds; p1 must re-acquire and in turn revoke p2
+    m.acquire("p1", "/a", WRITE, now=2.0)
+    assert flushed == ["p1", "p2"]
+
+
+def test_read_leases_shared():
+    m = LeaseManager("n0", lambda h, p: (_ for _ in ()).throw(
+        AssertionError("no revocation for shared reads")))
+    m.acquire("p1", "/a", READ, now=0.0)
+    m.acquire("p2", "/a", READ, now=0.0)
+    assert m.transfers == 0
+
+
+def test_write_lease_refresh_same_holder():
+    m = LeaseManager("n0", lambda h, p: None)
+    l1 = m.acquire("p1", "/a", WRITE, now=0.0)
+    l2 = m.acquire("p1", "/a/sub", WRITE, now=1.0)
+    assert l1 is l2  # subtree lease covers; refreshed not re-granted

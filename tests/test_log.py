@@ -1,0 +1,98 @@
+"""UpdateLog: append/replay/coalesce/truncate + crash prefix semantics."""
+import os
+
+import pytest
+
+from repro.core import log as L
+from repro.core.log import Entry, UpdateLog, decode_stream
+
+
+def test_append_and_index(tmp_path):
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    lg.append(L.OP_PUT, "/x", b"1")
+    lg.append(L.OP_PUT, "/y", b"2")
+    lg.append(L.OP_RENAME, "/x", b"/z")
+    lg.append(L.OP_DELETE, "/y")
+    assert lg.index["/z"] == b"1"
+    assert lg.index["/x"] is None  # tombstone
+    assert lg.index["/y"] is None
+    assert lg.last_seqno == 4
+
+
+def test_persistence_roundtrip(tmp_path):
+    p = str(tmp_path / "l" / "a.log")
+    lg = UpdateLog(p)
+    for i in range(10):
+        lg.append(L.OP_PUT, f"/k{i}", bytes([i]))
+    lg.persist()
+    lg.close()
+    lg2 = UpdateLog(p)
+    assert lg2.last_seqno == 10
+    assert lg2.index["/k7"] == bytes([7])
+
+
+def test_torn_write_prefix(tmp_path):
+    """A torn final record must be dropped; the prefix must survive."""
+    p = str(tmp_path / "l" / "a.log")
+    lg = UpdateLog(p)
+    for i in range(5):
+        lg.append(L.OP_PUT, f"/k{i}", b"v" * 50)
+    lg.persist()
+    lg.close()
+    with open(p, "rb+") as f:
+        f.truncate(os.path.getsize(p) - 13)  # tear the last record
+    lg2 = UpdateLog(p)
+    assert lg2.last_seqno == 4  # prefix only
+    assert "/k4" not in lg2.index
+    assert lg2.index["/k3"] == b"v" * 50
+    # appends continue cleanly after the repaired tail
+    lg2.append(L.OP_PUT, "/k9", b"x")
+    assert lg2.last_seqno == 5
+
+
+def test_corrupt_middle_cuts_history(tmp_path):
+    p = str(tmp_path / "l" / "a.log")
+    lg = UpdateLog(p)
+    for i in range(5):
+        lg.append(L.OP_PUT, f"/k{i}", b"data")
+    lg.persist()
+    lg.close()
+    size = os.path.getsize(p)
+    with open(p, "rb+") as f:
+        f.seek(size // 2)
+        f.write(b"\xff\xff\xff")
+    lg2 = UpdateLog(p)
+    assert lg2.last_seqno < 5  # cut at corruption, earlier prefix intact
+
+
+def test_seqno_monotonic_across_incarnations(tmp_path):
+    p = str(tmp_path / "l" / "a.log")
+    lg = UpdateLog(p)
+    for i in range(3):
+        lg.append(L.OP_PUT, "/a", b"x")
+    lg.truncate_through(lg.last_seqno)
+    lg.close()
+    lg2 = UpdateLog(p)
+    e = lg2.append(L.OP_PUT, "/b", b"y")
+    assert e.seqno == 4  # never reuses digested seqnos
+
+
+def test_coalesce_drops_superseded_puts():
+    es = [Entry(1, L.OP_PUT, "/a", b"1"), Entry(2, L.OP_PUT, "/b", b"1"),
+          Entry(3, L.OP_PUT, "/a", b"2"), Entry(4, L.OP_PUT, "/a", b"3")]
+    out = UpdateLog.coalesce(es)
+    assert [e.seqno for e in out] == [2, 4]
+
+
+def test_coalesce_respects_rename():
+    es = [Entry(1, L.OP_PUT, "/a", b"1"),
+          Entry(2, L.OP_RENAME, "/a", b"/b"),
+          Entry(3, L.OP_PUT, "/a", b"2")]
+    out = UpdateLog.coalesce(es)
+    assert [e.seqno for e in out] == [1, 2, 3]  # nothing droppable
+
+
+def test_decode_stream_rejects_bad_crc():
+    e = Entry(1, L.OP_PUT, "/a", b"hello").encode()
+    bad = e[:-3] + b"zzz"
+    assert decode_stream(bad) == []

@@ -1,0 +1,79 @@
+"""Failure scenarios: process crash, node failover, rejoin, cascades."""
+from repro.core import AssiseCluster
+
+
+def test_process_crash_local_recovery(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/r/a", b"committed")
+    ls.fsync()
+    ls.put("/r/b", b"unsynced-but-logged")
+    ls.log.persist()
+    tmp_cluster.kill_process(ls)
+    ls2 = tmp_cluster.recover_process_local("p1", "node0")
+    # both survive a *process* crash: the local NVM log has them
+    assert ls2.get("/r/a") == b"committed"
+    assert ls2.get("/r/b") == b"unsynced-but-logged"
+
+
+def test_node_failover_to_cache_replica(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/f/a", b"acked")
+    ls.fsync()
+    ls.put("/f/b", b"never-synced")  # lost with the node (pessimistic)
+    tmp_cluster.kill_node("node0")
+    assert tmp_cluster.detect_failures_now() == ["node0"]
+    ls2 = tmp_cluster.failover_process("p1")
+    assert ls2.sfs.node_id != "node0"
+    assert ls2.get("/f/a") == b"acked"  # fsync'd prefix survives
+    assert ls2.get("/f/b") is None  # unreplicated suffix does not
+
+
+def test_epoch_invalidation_on_rejoin(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/e/x", b"v1")
+    ls.digest()
+    tmp_cluster.kill_node("node0")
+    tmp_cluster.detect_failures_now()
+    ls2 = tmp_cluster.failover_process("p1")
+    ls2.put("/e/x", b"v2")
+    ls2.fsync()
+    ls2.digest()
+    sfs0 = tmp_cluster.restart_node("node0")
+    # node0's stale copy of /e/x was invalidated via the epoch bitmap
+    v = sfs0.read_any("/e/x")
+    assert v in (None, b"v2")
+    assert v != b"v1"
+
+
+def test_cascaded_failure_promotes_reserve(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/c/k", b"vital")
+    ls.fsync()
+    ls.digest()
+    # kill both cache replicas -> reserve (node2) must serve
+    tmp_cluster.kill_node("node0")
+    tmp_cluster.detect_failures_now()
+    ls2 = tmp_cluster.failover_process("p1")
+    ls2.put("/c/k2", b"second")
+    ls2.fsync()
+    tmp_cluster.kill_node(ls2.sfs.node_id)
+    tmp_cluster.detect_failures_now()
+    chain = tmp_cluster.cm.chain_for("/c/k")
+    assert "node2" in chain  # reserve promoted into the chain
+    ls3 = tmp_cluster.failover_process("p1")
+    assert ls3.get("/c/k") == b"vital"
+
+
+def test_optimistic_mode_loses_only_uncoalesced_tail(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=3, replication=2,
+                      mode="optimistic")
+    ls = c.open_process("p1")
+    ls.put("/o/a", b"1")
+    ls.dsync()  # replicated
+    ls.put("/o/b", b"2")  # at-risk window
+    c.kill_node("node0")
+    c.detect_failures_now()
+    ls2 = c.failover_process("p1")
+    assert ls2.get("/o/a") == b"1"
+    assert ls2.get("/o/b") is None  # prefix semantics: clean cut
+    c.close()

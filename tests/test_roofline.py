@@ -1,0 +1,53 @@
+"""Roofline HLO parser: exactness on known programs (incl. scan trips)."""
+import jax
+import jax.numpy as jnp
+
+from repro import roofline
+
+
+def _scan_fn(w, x, n=8):
+    def body(c, _):
+        return jax.nn.relu(c @ w), None
+    y, _ = jax.lax.scan(body, x, None, length=n)
+    return y
+
+
+def test_scan_trip_multiplication():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    txt = jax.jit(_scan_fn).lower(w, x).compile().as_text()
+    c = roofline.entry_cost(txt)
+    assert c.flops == 8 * 2 * 32 * 256 * 256
+
+
+def test_grad_of_scan_counts_backward():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    txt = jax.jit(jax.grad(lambda w, x: _scan_fn(w, x).sum())).lower(
+        w, x).compile().as_text()
+    c = roofline.entry_cost(txt)
+    assert c.flops == 3 * 8 * 2 * 32 * 256 * 256  # fwd + 2 bwd dots
+
+
+def test_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    txt = jax.jit(lambda a, b: a @ b).lower(a, b).compile().as_text()
+    assert roofline.entry_cost(txt).flops == 2 * 64 * 128 * 32
+
+
+def test_collective_parse():
+    line = ('%ag = f32[4096,512]{1,0} all-gather(%x), channel_id=1, '
+            'replica_groups=[16,32]<=[32,16]T(1,0), dimensions={0}')
+    assert roofline._group_size(line) == 32
+    assert roofline._trip_count(
+        'while(...), backend_config={"known_trip_count":{"n":"72"}}') == 72
+
+
+def test_roofline_terms_shape():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(lambda a, b: a @ b).lower(a, a).compile().as_text()
+    t = roofline.roofline_terms(txt, model_flops_per_chip=1e6)
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "roofline_fraction", "useful_flops_ratio"):
+        assert k in t

@@ -1,0 +1,70 @@
+"""Sharding rules: every parameter of every assigned arch must be
+divisible by its assigned mesh axes (single-pod 16x16 and multi-pod
+2x16x16), without building real device meshes."""
+from functools import partial
+
+import pytest
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.sharding import _param_partition, _path_names
+from repro.models.transformer import RunConfig, init_params
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _spec_sizes(entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= AXIS_SIZES[a]
+        return n
+    return AXIS_SIZES[entry]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("fsdp_axes", [None, ("data",), ("pod", "data")])
+def test_param_divisibility(arch, fsdp_axes):
+    cfg = get_config(arch)
+    rc = RunConfig(head_pad=16)  # as the dry-run configures for TP mode
+    shapes = jax.eval_shape(partial(init_params, cfg, rc=rc),
+                            jax.random.key(0))
+
+    bad = []
+
+    def check(path, leaf):
+        names = _path_names(path)
+        ndim = len(leaf.shape)
+        if names and names[0] == "stages":
+            if cfg.stages[int(names[1])].repeat > 1:
+                ndim -= 1
+        spec = tuple(_param_partition(names, ndim, fsdp_axes))
+        # spec entries align with the trailing len(spec) dims
+        for dim_size, entry in zip(leaf.shape[-len(spec):] if spec else (),
+                                   spec):
+            n = _spec_sizes(entry)
+            if dim_size % n != 0:
+                bad.append(("/".join(names), leaf.shape, spec))
+
+    jax.tree_util.tree_map_with_path(check, shapes)
+    assert not bad, bad[:5]
+
+
+def test_batch_axes_fallback():
+    """batch_axes must pick the largest divisible combo."""
+    from repro.launch.sharding import ShardingPolicy, batch_axes
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    m = FakeMesh()
+    z1 = ShardingPolicy(mode="dp_zero1")
+    tp = ShardingPolicy(mode="tp_fsdp")
+    assert batch_axes(m, z1, 512) == ("pod", "data", "model")
+    assert batch_axes(m, z1, 256) == ("data", "model")
+    assert batch_axes(m, tp, 256) == ("pod", "data")
+    assert batch_axes(m, tp, 1) is None
