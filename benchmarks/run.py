@@ -1,6 +1,8 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows (see DESIGN.md §6 for the table/figure -> benchmark map).
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -9,8 +11,11 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--json", default="", metavar="BENCH_1.json",
+                    help="also dump all rows as JSON (perf trajectory "
+                         "across PRs)")
     args = ap.parse_args()
-    from benchmarks import paper, train_ckpt
+    from benchmarks import common, paper, train_ckpt
     benches = paper.ALL + train_ckpt.ALL
     print("name,us_per_call,derived")
     failed = 0
@@ -25,6 +30,21 @@ def main() -> None:
             print(f"BENCH-FAIL {b.__name__}", file=sys.stderr)
             traceback.print_exc()
         print(f"# {b.__name__} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        payload = {
+            "schema": 1,
+            "unix_time": time.time(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "filter": args.only,
+            "failed_benches": failed,
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in common.ROWS],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload['rows'])} rows to {args.json}",
+              flush=True)
     if failed:
         raise SystemExit(1)
 

@@ -11,10 +11,12 @@ from repro.core.cluster import ClusterManager
 from repro.core.harness import AssiseCluster
 from repro.core.log import (Entry, UpdateLog, OP_DELETE, OP_PUT, OP_RENAME,
                             decode_stream)
+from repro.core.segstore import FileArea, SegmentStore
 from repro.core.sharedfs import SharedFS
 from repro.core.store import LibState, recover_process
 from repro.core.transport import Transport, NodeDown
 
-__all__ = ["AssiseCluster", "ClusterManager", "Entry", "LibState",
-           "NodeDown", "SharedFS", "Transport", "UpdateLog", "OP_PUT",
-           "OP_DELETE", "OP_RENAME", "decode_stream", "recover_process"]
+__all__ = ["AssiseCluster", "ClusterManager", "Entry", "FileArea",
+           "LibState", "NodeDown", "SegmentStore", "SharedFS", "Transport",
+           "UpdateLog", "OP_PUT", "OP_DELETE", "OP_RENAME", "decode_stream",
+           "recover_process"]

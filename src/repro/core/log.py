@@ -13,6 +13,7 @@ no intervening rename/delete touches that path.
 """
 from __future__ import annotations
 
+import bisect
 import os
 import struct
 import zlib
@@ -67,11 +68,19 @@ def decode_stream(buf: bytes) -> List[Entry]:
 
 
 class UpdateLog:
-    """File-backed, append-only update log with an in-memory index.
+    """File-backed, append-only update log with in-memory indexes.
 
     The in-memory ``index`` is the paper's "log hashtable" (Fig. 10):
     path -> latest value among un-digested entries, for O(1) read hits on
     recently written data.
+
+    The replication path is indexed too: the undigested suffix of the
+    file is mirrored in an in-memory byte buffer with a parallel
+    ``seqno -> byte-offset`` index, so ``encoded_since`` hands the chain
+    a contiguous pre-encoded byte range in one slice — no per-entry
+    re-encode per replicate — and ``truncate_through`` rotates the
+    suffix into a fresh segment file with one write + ``os.replace``
+    instead of re-encoding every surviving entry.
     """
 
     def __init__(self, path: str, capacity_bytes: int = 1 << 30,
@@ -82,6 +91,9 @@ class UpdateLog:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         self._f = open(path, "ab+")
         self._entries: List[Entry] = []
+        self._buf = bytearray()    # encoded undigested suffix (= file)
+        self._offsets: List[int] = []  # entry i -> offset into _buf
+        self._seqnos: List[int] = []   # entry i -> seqno (bisect key)
         self._next_seq = 1
         self._base_seq = 0  # all entries <= base_seq have been digested
         self.index = {}
@@ -93,8 +105,12 @@ class UpdateLog:
     def append(self, op: int, path: str, data: bytes = b"") -> Entry:
         e = Entry(self._next_seq, op, path, data)
         self._next_seq += 1
-        self._f.write(e.encode())
+        enc = e.encode()
+        self._f.write(enc)
         self._entries.append(e)
+        self._offsets.append(len(self._buf))
+        self._seqnos.append(e.seqno)
+        self._buf += enc
         self.bytes += e.nbytes
         self._apply_to_index(e)
         return e
@@ -122,8 +138,20 @@ class UpdateLog:
     def last_seqno(self) -> int:
         return self._entries[-1].seqno if self._entries else self._base_seq
 
+    def _idx_after(self, seqno: int) -> int:
+        """Index of the first entry with seqno > the given seqno."""
+        return bisect.bisect_right(self._seqnos, seqno)
+
     def entries_since(self, seqno: int) -> List[Entry]:
-        return [e for e in self._entries if e.seqno > seqno]
+        return self._entries[self._idx_after(seqno):]
+
+    def encoded_since(self, seqno: int) -> bytes:
+        """The pre-encoded byte range for all entries past ``seqno`` —
+        one buffer slice, zero re-encoding (the replication fast path)."""
+        i = self._idx_after(seqno)
+        if i >= len(self._entries):
+            return b""
+        return bytes(self._buf[self._offsets[i]:])
 
     @staticmethod
     def coalesce(entries: Iterable[Entry]) -> List[Entry]:
@@ -138,9 +166,10 @@ class UpdateLog:
                     keep[j] = False
                 last_put[e.path] = i
             elif e.op == OP_DELETE:
+                # PUT then DELETE: the PUT is dead weight; the DELETE
+                # stays (lower tiers may still hold an older value).
                 j = last_put.pop(e.path, None)
                 if j is not None:
-                    keep[j] = False  # PUT then DELETE: both redundant? keep
                     keep[j] = False
             elif e.op == OP_RENAME:
                 # rename pins prior PUTs of src (they move), clears dst hist
@@ -162,16 +191,26 @@ class UpdateLog:
             f.write(str(self._base_seq))
 
     def truncate_through(self, seqno: int) -> None:
-        """Drop entries <= seqno (after digest). Rewrites the backing file.
+        """Drop entries <= seqno (after digest) by rotating the suffix
+        into a fresh segment file: one pre-encoded slice write + an
+        atomic ``os.replace`` — no per-entry re-encode, and a crash
+        leaves either the old or the new file, never a half-rewrite.
         The digested-through seqno is persisted so seqnos stay monotonic
         across process incarnations (chain slots rely on this)."""
-        self._entries = [e for e in self._entries if e.seqno > seqno]
+        i = self._idx_after(seqno)
+        cut = self._offsets[i] if i < len(self._entries) else len(self._buf)
+        self._entries = self._entries[i:]
+        self._offsets = [o - cut for o in self._offsets[i:]]
+        self._seqnos = self._seqnos[i:]
+        self._buf = self._buf[cut:]
         self._base_seq = max(self._base_seq, seqno)
         self._write_base()
+        self._f.flush()
         self._f.close()
-        with open(self.path, "wb") as f:
-            for e in self._entries:
-                f.write(e.encode())
+        nxt = self.path + ".next"
+        with open(nxt, "wb") as f:
+            f.write(self._buf)
+        os.replace(nxt, self.path)  # segment rotation
         self._f = open(self.path, "ab+")
         self.bytes = sum(e.nbytes for e in self._entries)
         self.index = {}
@@ -188,17 +227,21 @@ class UpdateLog:
         buf = self._f.read()
         self._entries = decode_stream(buf)
         self.bytes = sum(e.nbytes for e in self._entries)
+        off = 0
         for e in self._entries:
             self._apply_to_index(e)
+            self._offsets.append(off)
+            self._seqnos.append(e.seqno)
+            off += e.nbytes
+        self._buf = bytearray(buf[:off])
         if self._entries:
             self._next_seq = max(self._next_seq,
                                  self._entries[-1].seqno + 1)
         # truncate any torn tail so future appends are clean
-        valid = sum(e.nbytes for e in self._entries)
-        if valid < len(buf):
+        if off < len(buf):
             self._f.close()
             with open(self.path, "rb+") as f:
-                f.truncate(valid)
+                f.truncate(off)
             self._f = open(self.path, "ab+")
 
     def replay(self, apply_fn: Callable[[Entry], None],

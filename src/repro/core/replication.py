@@ -6,12 +6,17 @@ it to continue the chain; the ack returns through the nested calls —
 exactly the paper's A1/A2 flow. Ordering of one-sided writes gives the
 replicated log prefix semantics for free.
 
-Each ``ReplicaSlot`` decodes its byte stream incrementally and maintains
-an in-memory mirror index, so a failover target already has the dead
-process's cache state materialized (near-instant failover).
+The wire payload is the log's **pre-encoded** byte range
+(``UpdateLog.encoded_since`` — one buffer slice), so replicating N
+entries costs zero per-entry re-encoding on the writer. Each
+``ReplicaSlot`` decodes its byte stream incrementally, keeps a
+``seqno -> byte-offset`` index over it, and maintains an in-memory
+mirror index, so a failover target already has the dead process's cache
+state materialized (near-instant failover).
 """
 from __future__ import annotations
 
+import bisect
 import os
 from typing import List, Optional
 
@@ -26,8 +31,10 @@ class ReplicaSlot:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         self._f = open(path, "ab+")
         self.fsync_data = fsync_data
-        self._buf = b""
+        self._buf = bytearray()
         self.entries: List[Entry] = []
+        self._offsets: List[int] = []  # entry i -> offset into _buf
+        self._seqnos: List[int] = []   # entry i -> seqno (bisect key)
         self.mirror = {}  # path -> bytes (latest, undigested)
         self.acked_seqno = 0
         self.digested_seqno = 0
@@ -35,12 +42,29 @@ class ReplicaSlot:
 
     def _recover(self) -> None:
         self._f.seek(0)
-        self._buf = self._f.read()
-        self.entries = decode_stream(self._buf)
-        for e in self.entries:
+        buf = self._f.read()
+        entries = decode_stream(buf)
+        valid = sum(e.nbytes for e in entries)
+        self._buf = bytearray(buf[:valid])
+        self._ingest(entries, 0)
+        if valid < len(buf):
+            # torn tail from a crash mid one-sided write: repair it now
+            # so later appends don't land after undecodable garbage
+            self._f.close()
+            with open(self.path, "rb+") as f:
+                f.truncate(valid)
+            self._f = open(self.path, "ab+")
+
+    def _ingest(self, new: List[Entry], start_off: int) -> None:
+        off = start_off
+        for e in new:
+            self.entries.append(e)
+            self._offsets.append(off)
+            self._seqnos.append(e.seqno)
+            off += e.nbytes
             self._apply(e)
-        if self.entries:
-            self.acked_seqno = self.entries[-1].seqno
+        if new:
+            self.acked_seqno = new[-1].seqno
 
     def _apply(self, e: Entry) -> None:
         from repro.core import log as L
@@ -61,27 +85,35 @@ class ReplicaSlot:
         self._f.flush()
         if self.fsync_data:
             os.fsync(self._f.fileno())
+        start = len(self._buf)
         self._buf += data
-        new = decode_stream(data)
-        for e in new:
-            self.entries.append(e)
-            self._apply(e)
-        if new:
-            self.acked_seqno = new[-1].seqno
+        self._ingest(decode_stream(data), start)
 
     def read(self, offset: int, size: int) -> bytes:
-        return self._buf[offset: offset + size]
+        return bytes(self._buf[offset: offset + size])
+
+    def _idx_after(self, seqno: int) -> int:
+        return bisect.bisect_right(self._seqnos, seqno)
 
     def entries_since(self, seqno: int) -> List[Entry]:
-        return [e for e in self.entries if e.seqno > seqno]
+        return self.entries[self._idx_after(seqno):]
 
     def truncate_through(self, seqno: int) -> None:
-        self.entries = [e for e in self.entries if e.seqno > seqno]
+        """Drop digested entries by rotating the undigested suffix into
+        a fresh slot file (single slice write + atomic ``os.replace``)."""
+        i = self._idx_after(seqno)
+        cut = self._offsets[i] if i < len(self.entries) else len(self._buf)
+        self.entries = self.entries[i:]
+        self._offsets = [o - cut for o in self._offsets[i:]]
+        self._seqnos = self._seqnos[i:]
+        self._buf = self._buf[cut:]
         self.digested_seqno = max(self.digested_seqno, seqno)
-        self._buf = b"".join(e.encode() for e in self.entries)
+        self._f.flush()
         self._f.close()
-        with open(self.path, "wb") as f:
+        nxt = self.path + ".next"
+        with open(nxt, "wb") as f:
             f.write(self._buf)
+        os.replace(nxt, self.path)  # segment rotation
         self._f = open(self.path, "ab+")
         self.mirror = {}
         for e in self.entries:
@@ -100,14 +132,21 @@ class ChainClient:
         self.transport = transport
         self.replicated_seqno = 0
 
-    def replicate(self, entries: List[Entry]) -> int:
-        """Synchronously chain-replicate; returns acked seqno."""
+    def replicate(self, entries: List[Entry],
+                  data: Optional[bytes] = None) -> int:
+        """Synchronously chain-replicate; returns acked seqno.
+
+        ``data``, when given, is the caller's pre-encoded byte range for
+        ``entries`` (e.g. ``UpdateLog.encoded_since``) and is forwarded
+        as-is — the zero-copy path. Without it the entries are encoded
+        here (coalesced batches have no contiguous file range)."""
         if not entries:
             return self.replicated_seqno
         if not self.chain:
             self.replicated_seqno = entries[-1].seqno
             return self.replicated_seqno
-        data = b"".join(e.encode() for e in entries)
+        if data is None:
+            data = b"".join(e.encode() for e in entries)
         head, rest = self.chain[0], self.chain[1:]
         region = f"slot/{self.proc_id}"
         self.transport.one_sided_write(head, region, data)

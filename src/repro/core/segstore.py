@@ -1,0 +1,425 @@
+"""Segment-log storage engine for SharedFS areas (Haystack-style).
+
+The seed `Area` paid an ``open()/write()/close()`` plus a flushed
+manifest line for *every* put — per-IO software amplification the paper
+spends §3.3 eliminating. This engine removes it:
+
+- values live as **needle** records appended to large segment files
+  (rotated at ``segment_bytes``), so a put is one buffered append;
+- an in-memory index maps ``path -> (segment_id, offset, length)`` so a
+  get is one ``os.pread`` of exactly the value bytes — no per-path
+  files, no per-path metadata IO (Haystack, OSDI'10);
+- deletes and renames are small metadata needles — the data bytes are
+  never rewritten;
+- durability is **batched**: callers group ops and call ``commit()``
+  once per batch (SharedFS commits per digest), replacing the seed's
+  per-op manifest flush;
+- crash recovery needs no manifest at all: segments are replayed in id
+  order with **prefix semantics** per segment (each needle carries a
+  CRC; scanning stops at the first torn/corrupt record and the tail is
+  truncated);
+- compaction copies live needles into fresh segments once the dead-byte
+  ratio from overwrites/deletes crosses a threshold, then unlinks the
+  old segments. Old segments are removed only after the new ones are
+  flushed, and replay order (ascending segment id) makes a crash
+  mid-compaction harmless.
+
+Needle wire format: see DESIGN.md §3.
+
+``FileArea`` below preserves the seed's file-per-path engine verbatim —
+it is the baseline `bench_segstore` measures the new engine against.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import struct
+import time
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+NEEDLE_MAGIC = 0xA551_6E0D
+N_PUT = 1
+N_DELETE = 2
+N_RENAME = 3
+
+# magic, op, path_len, data_len, crc
+_NEEDLE = struct.Struct("<IBHIi")
+
+_SEG_FMT = "seg-%08d.log"
+
+
+class SegmentStore:
+    """A persistent path->bytes area backed by append-only segment files
+    with an in-memory ``path -> (segment_id, offset, length)`` index.
+
+    API-compatible with the seed ``Area`` (put/get/delete/rename/
+    contains/paths/lru_victims, ``bytes``/``capacity``) plus ``commit()``
+    for batched durability and ``compact()`` for space reclamation.
+    """
+
+    def __init__(self, root: str, capacity: int = 1 << 40, *,
+                 segment_bytes: int = 8 << 20, fsync_data: bool = False,
+                 compact_min_dead: int = 1 << 20,
+                 compact_dead_ratio: float = 0.5):
+        self.root = root
+        self.capacity = capacity
+        self.segment_bytes = segment_bytes
+        self.fsync_data = fsync_data
+        self.compact_min_dead = compact_min_dead
+        self.compact_dead_ratio = compact_dead_ratio
+        os.makedirs(root, exist_ok=True)
+        # path -> (segment_id, value_offset, value_length)
+        self.index: Dict[str, Tuple[int, int, int]] = {}
+        self.sizes: Dict[str, int] = {}
+        self.lru: Dict[str, float] = {}
+        self.bytes = 0        # live value bytes (tier accounting)
+        self.disk_bytes = 0   # total appended needle bytes on disk
+        self.dead_bytes = 0   # needle bytes superseded by overwrite/delete
+        self.compactions = 0
+        self._read_fds: Dict[int, int] = {}  # segment_id -> O_RDONLY fd
+        self._active_id = 0
+        self._active = None
+        self._active_off = 0
+        self._dirty = False
+        self._recover()
+        self._open_active()
+
+    # -- segment files ------------------------------------------------------
+    def _seg_path(self, seg_id: int) -> str:
+        return os.path.join(self.root, _SEG_FMT % seg_id)
+
+    def _seg_ids(self) -> List[int]:
+        out = []
+        for fn in os.listdir(self.root):
+            if fn.startswith("seg-") and fn.endswith(".log"):
+                try:
+                    out.append(int(fn[4:-4]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _open_active(self) -> None:
+        ids = self._seg_ids()
+        self._active_id = ids[-1] if ids else 1
+        if ids and os.path.getsize(self._seg_path(self._active_id)) \
+                >= self.segment_bytes:
+            self._active_id += 1
+        self._active = open(self._seg_path(self._active_id), "ab")
+        self._active_off = self._active.tell()
+
+    def _rotate(self) -> None:
+        self._active.flush()
+        self._active.close()
+        self._active_id += 1
+        self._active = open(self._seg_path(self._active_id), "ab")
+        self._active_off = 0
+
+    def _append(self, op: int, path: str, data: bytes) -> Tuple[int, int]:
+        """Append one needle; returns (segment_id, value_offset)."""
+        if self._active_off >= self.segment_bytes:
+            self._rotate()
+        p = path.encode()
+        crc = zlib.crc32(p + data) & 0x7FFFFFFF
+        rec = _NEEDLE.pack(NEEDLE_MAGIC, op, len(p), len(data), crc) \
+            + p + data
+        voff = self._active_off + _NEEDLE.size + len(p)
+        self._active.write(rec)
+        self._active_off += len(rec)
+        self.disk_bytes += len(rec)
+        self._dirty = True
+        return self._active_id, voff
+
+    # -- recovery -----------------------------------------------------------
+    def _recover(self) -> None:
+        for seg_id in self._seg_ids():
+            sp = self._seg_path(seg_id)
+            with open(sp, "rb") as f:
+                buf = f.read()
+            valid = self._replay_segment(seg_id, buf)
+            if valid < len(buf):  # torn/corrupt tail: prefix semantics
+                with open(sp, "rb+") as f:
+                    f.truncate(valid)
+
+    def _replay_segment(self, seg_id: int, buf: bytes) -> int:
+        """Apply a segment's needles to the index; returns the byte
+        length of the maximal verifiable prefix."""
+        off, n = 0, len(buf)
+        while off + _NEEDLE.size <= n:
+            magic, op, plen, dlen, crc = _NEEDLE.unpack_from(buf, off)
+            if magic != NEEDLE_MAGIC:
+                break
+            end = off + _NEEDLE.size + plen + dlen
+            if end > n:
+                break  # torn write
+            p = buf[off + _NEEDLE.size: off + _NEEDLE.size + plen]
+            d = buf[off + _NEEDLE.size + plen: end]
+            if (zlib.crc32(p + d) & 0x7FFFFFFF) != crc:
+                break  # corruption: cut the history here
+            path = p.decode()
+            if op == N_PUT:
+                self._index_put(path, seg_id,
+                                off + _NEEDLE.size + plen, dlen)
+            elif op == N_DELETE:
+                self._index_drop(path)
+            elif op == N_RENAME:
+                self._index_rename(path, d.decode())
+            self.disk_bytes += end - off
+            off = end
+        return off
+
+    # -- index maintenance (shared by live ops and replay) -------------------
+    def _needle_overhead(self, path: str) -> int:
+        return _NEEDLE.size + len(path.encode())
+
+    def _index_put(self, path: str, seg_id: int, voff: int,
+                   vlen: int) -> None:
+        old = self.index.get(path)
+        if old is not None:
+            self.dead_bytes += old[2] + self._needle_overhead(path)
+            self.bytes -= self.sizes.get(path, 0)
+        self.index[path] = (seg_id, voff, vlen)
+        self.sizes[path] = vlen
+        self.bytes += vlen
+        self.lru.setdefault(path, 0.0)
+
+    def _index_drop(self, path: str) -> None:
+        old = self.index.pop(path, None)
+        if old is not None:
+            self.dead_bytes += old[2] + self._needle_overhead(path)
+            self.bytes -= self.sizes.pop(path, 0)
+            self.lru.pop(path, None)
+
+    def _index_rename(self, src: str, dst: str) -> None:
+        loc = self.index.pop(src, None)
+        if loc is None:
+            return
+        if dst in self.index:
+            self._index_drop(dst)
+        self.index[dst] = loc
+        self.sizes[dst] = self.sizes.pop(src, loc[2])
+        self.lru[dst] = self.lru.pop(src, 0.0)
+
+    # -- data path ------------------------------------------------------------
+    def put(self, path: str, data: bytes) -> None:
+        seg_id, voff = self._append(N_PUT, path, data)
+        self._index_put(path, seg_id, voff, len(data))
+        self.lru[path] = time.monotonic()
+        self._maybe_compact()
+
+    def get(self, path: str) -> Optional[bytes]:
+        loc = self.index.get(path)
+        if loc is None:
+            return None
+        self.lru[path] = time.monotonic()
+        return self._read_loc(loc)
+
+    def _read_loc(self, loc: Tuple[int, int, int]) -> bytes:
+        seg_id, voff, vlen = loc
+        if seg_id == self._active_id and self._dirty:
+            self._active.flush()
+            self._dirty = False
+        fd = self._read_fds.get(seg_id)
+        if fd is None:
+            fd = os.open(self._seg_path(seg_id), os.O_RDONLY)
+            self._read_fds[seg_id] = fd
+        return os.pread(fd, vlen, voff)
+
+    def delete(self, path: str) -> None:
+        if path not in self.index:
+            return
+        self._append(N_DELETE, path, b"")
+        self._index_drop(path)
+        self._maybe_compact()
+
+    def rename(self, src: str, dst: str) -> None:
+        if src not in self.index:
+            return
+        self._append(N_RENAME, src, dst.encode())
+        self._index_rename(src, dst)
+        self.lru[dst] = time.monotonic()
+
+    def commit(self) -> None:
+        """Flush the batch to the persistence domain (one flush covers
+        every append since the previous commit)."""
+        if self._dirty:
+            self._active.flush()
+            if self.fsync_data:
+                os.fsync(self._active.fileno())
+            self._dirty = False
+
+    # -- queries (Area-compatible) ---------------------------------------------
+    def contains(self, path: str) -> bool:
+        return path in self.index
+
+    def paths(self) -> List[str]:
+        return list(self.index)
+
+    def lru_victims(self, need_bytes: int) -> List[str]:
+        out, freed = [], 0
+        for p in sorted(self.lru, key=self.lru.get):
+            out.append(p)
+            freed += self.sizes.get(p, 0)
+            if self.bytes - freed <= self.capacity - need_bytes:
+                break
+        return out
+
+    # -- compaction --------------------------------------------------------------
+    def _maybe_compact(self) -> None:
+        if (self.dead_bytes >= self.compact_min_dead
+                and self.dead_bytes > self.compact_dead_ratio
+                * max(1, self.disk_bytes)):
+            self.compact()
+
+    def compact(self) -> None:
+        """Copy live needles into fresh segments, drop the old ones.
+
+        Crash-safe without a manifest: new segments get strictly higher
+        ids and are flushed before the old files are unlinked, and
+        replay applies segments in ascending id order — a crash at any
+        point recovers either the old or the new (equivalent) state.
+        """
+        self.commit()
+        old_ids = self._seg_ids()
+        self._active.close()
+        self._active_id = (old_ids[-1] if old_ids else 0) + 1
+        self._active = open(self._seg_path(self._active_id), "ab")
+        self._active_off = 0
+        self.disk_bytes = 0
+        live = sorted(self.index.items(), key=lambda kv: kv[1])
+        for path, loc in live:  # old-segment order: sequential reads
+            data = self._read_loc(loc)
+            seg_id, voff = self._append(N_PUT, path, data)
+            self.index[path] = (seg_id, voff, len(data))
+        self._active.flush()
+        if self.fsync_data:
+            os.fsync(self._active.fileno())
+        self._dirty = False
+        for seg_id in old_ids:
+            fd = self._read_fds.pop(seg_id, None)
+            if fd is not None:
+                os.close(fd)
+            try:
+                os.remove(self._seg_path(seg_id))
+            except FileNotFoundError:
+                pass
+        self.dead_bytes = 0
+        self.compactions += 1
+
+    def close(self) -> None:
+        self.commit()
+        self._active.close()
+        for fd in self._read_fds.values():
+            os.close(fd)
+        self._read_fds.clear()
+
+
+class FileArea:
+    """The seed's file-per-path engine (one file per value + a flushed
+    manifest line per op). Kept verbatim as the benchmark baseline that
+    `bench_segstore` compares the segment engine against."""
+
+    def __init__(self, root: str, capacity: int = 1 << 40):
+        self.root = root
+        self.capacity = capacity
+        os.makedirs(root, exist_ok=True)
+        self.manifest_path = os.path.join(root, "MANIFEST")
+        self.index: Dict[str, str] = {}
+        self.sizes: Dict[str, int] = {}
+        self.lru: Dict[str, float] = {}
+        self.bytes = 0
+        self._mf = None
+        self._recover()
+        self._mf = open(self.manifest_path, "a")
+
+    def _recover(self) -> None:
+        if not os.path.exists(self.manifest_path):
+            return
+        with open(self.manifest_path) as f:
+            for line in f:
+                if not line.endswith("\n"):
+                    break  # torn manifest tail
+                parts = line.rstrip("\n").split("\x00")
+                if parts[0] == "put" and len(parts) == 3:
+                    self.index[parts[1]] = parts[2]
+                elif parts[0] == "del" and len(parts) == 2:
+                    self.index.pop(parts[1], None)
+        for p, fn in list(self.index.items()):
+            fp = os.path.join(self.root, fn)
+            if os.path.exists(fp):
+                sz = os.path.getsize(fp)
+                self.sizes[p] = sz
+                self.bytes += sz
+                self.lru[p] = 0.0
+            else:
+                del self.index[p]
+
+    def _log(self, *parts: str) -> None:
+        self._mf.write("\x00".join(parts) + "\n")
+        self._mf.flush()
+
+    @staticmethod
+    def _fname(path: str) -> str:
+        return hashlib.sha1(path.encode()).hexdigest()
+
+    def put(self, path: str, data: bytes) -> None:
+        fn = self._fname(path)
+        with open(os.path.join(self.root, fn), "wb") as f:
+            f.write(data)
+        if path in self.sizes:
+            self.bytes -= self.sizes[path]
+        self.index[path] = fn
+        self.sizes[path] = len(data)
+        self.bytes += len(data)
+        self.lru[path] = time.monotonic()
+        self._log("put", path, fn)
+
+    def get(self, path: str) -> Optional[bytes]:
+        fn = self.index.get(path)
+        if fn is None:
+            return None
+        self.lru[path] = time.monotonic()
+        with open(os.path.join(self.root, fn), "rb") as f:
+            return f.read()
+
+    def delete(self, path: str) -> None:
+        fn = self.index.pop(path, None)
+        if fn is not None:
+            self.bytes -= self.sizes.pop(path, 0)
+            self.lru.pop(path, None)
+            try:
+                os.remove(os.path.join(self.root, fn))
+            except FileNotFoundError:
+                pass
+            self._log("del", path)
+
+    def rename(self, src: str, dst: str) -> None:
+        fn = self.index.pop(src, None)
+        if fn is None:
+            return
+        self.index[dst] = fn
+        self.sizes[dst] = self.sizes.pop(src, 0)
+        self.lru[dst] = time.monotonic()
+        self._log("del", src)
+        self._log("put", dst, fn)
+
+    def contains(self, path: str) -> bool:
+        return path in self.index
+
+    def paths(self):
+        return list(self.index)
+
+    def lru_victims(self, need_bytes: int) -> List[str]:
+        out, freed = [], 0
+        for p in sorted(self.lru, key=self.lru.get):
+            out.append(p)
+            freed += self.sizes.get(p, 0)
+            if self.bytes - freed <= self.capacity - need_bytes:
+                break
+        return out
+
+    def commit(self) -> None:  # durability is per-op; nothing batched
+        pass
+
+    def close(self) -> None:
+        self._mf.close()

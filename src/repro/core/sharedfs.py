@@ -2,127 +2,27 @@
 eviction, replica slots, lease management, permissions (paper §3).
 
 Tiers on a node:
-  hot shared area   nvm/shared/   (persistent; manifest-logged for recovery)
+  hot shared area   nvm/shared/   (persistent; segment-log, see segstore)
   reserve area      nvm/reserve/  (only on reserve replicas)
   cold storage      ssd/cold/     (LRU eviction target; "disaggregatable")
+
+Both persistent areas are `SegmentStore` segment logs (DESIGN.md §2):
+puts are buffered appends and each digest batch is made durable by a
+single ``commit()`` instead of a per-op manifest flush.
 """
 from __future__ import annotations
 
-import hashlib
 import os
-import time
 from typing import Dict, List, Optional
 
 from repro.core import log as L
 from repro.core.cluster import ClusterManager
 from repro.core.leases import LeaseManager, READ, WRITE
 from repro.core.replication import ReplicaSlot
+from repro.core.segstore import SegmentStore
 
-
-def _fname(path: str) -> str:
-    return hashlib.sha1(path.encode()).hexdigest()
-
-
-class Area:
-    """A persistent path->bytes area backed by files + a manifest log.
-
-    The manifest gives crash recovery: replaying it (prefix semantics —
-    truncated tail lines are dropped) rebuilds the index."""
-
-    def __init__(self, root: str, capacity: int = 1 << 40):
-        self.root = root
-        self.capacity = capacity
-        os.makedirs(root, exist_ok=True)
-        self.manifest_path = os.path.join(root, "MANIFEST")
-        self.index: Dict[str, str] = {}
-        self.sizes: Dict[str, int] = {}
-        self.lru: Dict[str, float] = {}
-        self.bytes = 0
-        self._mf = None
-        self._recover()
-        self._mf = open(self.manifest_path, "a")
-
-    def _recover(self) -> None:
-        if not os.path.exists(self.manifest_path):
-            return
-        with open(self.manifest_path) as f:
-            for line in f:
-                if not line.endswith("\n"):
-                    break  # torn manifest tail
-                parts = line.rstrip("\n").split("\x00")
-                if parts[0] == "put" and len(parts) == 3:
-                    self.index[parts[1]] = parts[2]
-                elif parts[0] == "del" and len(parts) == 2:
-                    self.index.pop(parts[1], None)
-        for p, fn in list(self.index.items()):
-            fp = os.path.join(self.root, fn)
-            if os.path.exists(fp):
-                sz = os.path.getsize(fp)
-                self.sizes[p] = sz
-                self.bytes += sz
-                self.lru[p] = 0.0
-            else:
-                del self.index[p]
-
-    def _log(self, *parts: str) -> None:
-        self._mf.write("\x00".join(parts) + "\n")
-        self._mf.flush()
-
-    def put(self, path: str, data: bytes) -> None:
-        fn = _fname(path)
-        with open(os.path.join(self.root, fn), "wb") as f:
-            f.write(data)
-        if path in self.sizes:
-            self.bytes -= self.sizes[path]
-        self.index[path] = fn
-        self.sizes[path] = len(data)
-        self.bytes += len(data)
-        self.lru[path] = time.monotonic()
-        self._log("put", path, fn)
-
-    def get(self, path: str) -> Optional[bytes]:
-        fn = self.index.get(path)
-        if fn is None:
-            return None
-        self.lru[path] = time.monotonic()
-        with open(os.path.join(self.root, fn), "rb") as f:
-            return f.read()
-
-    def delete(self, path: str) -> None:
-        fn = self.index.pop(path, None)
-        if fn is not None:
-            self.bytes -= self.sizes.pop(path, 0)
-            self.lru.pop(path, None)
-            try:
-                os.remove(os.path.join(self.root, fn))
-            except FileNotFoundError:
-                pass
-            self._log("del", path)
-
-    def rename(self, src: str, dst: str) -> None:
-        fn = self.index.pop(src, None)
-        if fn is None:
-            return
-        self.index[dst] = fn
-        self.sizes[dst] = self.sizes.pop(src, 0)
-        self.lru[dst] = time.monotonic()
-        self._log("del", src)
-        self._log("put", dst, fn)
-
-    def contains(self, path: str) -> bool:
-        return path in self.index
-
-    def paths(self):
-        return list(self.index)
-
-    def lru_victims(self, need_bytes: int) -> List[str]:
-        out, freed = [], 0
-        for p in sorted(self.lru, key=self.lru.get):
-            out.append(p)
-            freed += self.sizes.get(p, 0)
-            if self.bytes - freed <= self.capacity - need_bytes:
-                break
-        return out
+# The segment-log engine is the Area now; the name survives for callers.
+Area = SegmentStore
 
 
 class SharedFS:
@@ -139,8 +39,9 @@ class SharedFS:
         self.fsync_data = fsync_data
         area_name = "reserve" if is_reserve else "shared"
         self.hot = Area(os.path.join(root_dir, "nvm", area_name),
-                        hot_capacity)
-        self.cold = Area(os.path.join(root_dir, "ssd", "cold"))
+                        hot_capacity, fsync_data=fsync_data)
+        self.cold = Area(os.path.join(root_dir, "ssd", "cold"),
+                         fsync_data=fsync_data)
         self.slots: Dict[str, ReplicaSlot] = {}
         self.lease_mgr = LeaseManager(node_id, self._revoke_holder)
         self.local_procs: Dict[str, object] = {}  # proc_id -> LibState
@@ -181,12 +82,13 @@ class SharedFS:
                        rest: List[str]) -> int:
         """RPC: continue chain replication; ack = last seqno seen."""
         slot = self.slot_for(proc_id)
-        if not slot.entries or slot.entries[-1].seqno < \
-                (L.decode_stream(data)[-1].seqno if data else 0):
+        incoming = L.decode_stream(data) if data else []
+        if incoming and (not slot.entries
+                         or slot.entries[-1].seqno < incoming[-1].seqno):
             # One-sided write may already have landed (writer wrote to us
             # directly as chain head). Idempotent append if not.
             have = {e.seqno for e in slot.entries}
-            for e in L.decode_stream(data):
+            for e in incoming:
                 if e.seqno not in have:
                     slot.write(None, e.encode())
         if rest:
@@ -206,9 +108,12 @@ class SharedFS:
                 break
             self._apply_entry(e)
             applied += 1
+        self._evict_if_needed()
+        self._commit_areas()
+        # truncate only after the applied entries are durable in the
+        # areas — a crash in between must never lose the digested range
         slot.truncate_through(through_seqno)
         self.stats["digests"] += 1
-        self._evict_if_needed()
         return applied
 
     def digest_entries(self, entries: List[L.Entry]) -> int:
@@ -216,7 +121,13 @@ class SharedFS:
             self._apply_entry(e)
         self.stats["digests"] += 1
         self._evict_if_needed()
+        self._commit_areas()
         return len(entries)
+
+    def _commit_areas(self) -> None:
+        """One flush per digest batch (vs the seed's per-op flush)."""
+        self.hot.commit()
+        self.cold.commit()
 
     def _apply_entry(self, e: L.Entry) -> None:
         if e.op == L.OP_PUT:
@@ -237,6 +148,13 @@ class SharedFS:
 
     def _evict_if_needed(self) -> None:
         if self.hot.bytes <= self.hot.capacity:
+            # live data fits, but overwrite churn can leave the segment
+            # files holding up to ~2x live bytes: the modeled NVM tier
+            # is fixed-size, so reclaim dead needles when the on-disk
+            # footprint outgrows it
+            if self.hot.disk_bytes > self.hot.capacity \
+                    and self.hot.dead_bytes > 0:
+                self.hot.compact()
             return
         for p in self.hot.lru_victims(0):
             data = self.hot.get(p)
@@ -313,6 +231,7 @@ class SharedFS:
             if self.cold.contains(p):
                 self.cold.delete(p)
                 n += 1
+        self._commit_areas()
         self.stats["invalidated"] += n
         self.recovered_epoch = self.cluster.epoch
         return n

@@ -131,7 +131,8 @@ class LibState:
         self._replicate(coalesce=(self.mode == "optimistic"))
 
     def _replicate(self, coalesce: bool) -> None:
-        pending = self.log.entries_since(self.chain.replicated_seqno)
+        since = self.chain.replicated_seqno
+        pending = self.log.entries_since(since)
         if not pending:
             return
         if coalesce:
@@ -140,7 +141,8 @@ class LibState:
             self.chain.replicate(reduced)
             self.chain.replicated_seqno = pending[-1].seqno
         else:
-            self.chain.replicate(pending)
+            # zero-copy: ship the log's pre-encoded byte range as-is
+            self.chain.replicate(pending, self.log.encoded_since(since))
 
     # -- read path ------------------------------------------------------------
     def get(self, path: str) -> Optional[bytes]:

@@ -18,37 +18,39 @@ import time
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
+from repro.core.segstore import SegmentStore
 from repro.core.transport import Transport
 
 BLOCK = 4096
 
 
 class StorageServer:
-    """Replicated object/block server (OSD analogue)."""
+    """Replicated object/block server (OSD analogue).
+
+    Persistence uses the same segment-log engine as Assise's SharedFS
+    areas (committed per RPC — the OSD's per-request durability), so the
+    baseline comparison isolates *architecture* (disaggregation, block
+    amplification, central MDS), not the storage engine underneath."""
 
     def __init__(self, node_id: str, root: str, transport: Transport):
         self.node_id = node_id
         self.root = root
-        os.makedirs(root, exist_ok=True)
-        self.blocks: Dict[str, bytes] = {}
+        self.store = SegmentStore(root)
         transport.register_endpoint(node_id, self)
 
     def put_blocks(self, path: str, data: bytes) -> int:
-        self.blocks[path] = data
-        with open(os.path.join(self.root,
-                               path.replace("/", "_")), "wb") as f:
-            f.write(data)
+        self.store.put(path, data)
+        self.store.commit()
         return len(data)
 
     def get_blocks(self, path: str) -> Optional[bytes]:
-        return self.blocks.get(path)
+        return self.store.get(path)
 
     def delete(self, path: str) -> None:
-        self.blocks.pop(path, None)
+        self.store.delete(path)
 
     def rename(self, src: str, dst: str) -> None:
-        if src in self.blocks:
-            self.blocks[dst] = self.blocks.pop(src)
+        self.store.rename(src, dst)
 
 
 class MetadataServer:

@@ -3,30 +3,34 @@ replication — every op crosses the network (the paper's Octopus rows)."""
 from __future__ import annotations
 
 import os
-from typing import Dict, Optional
+from typing import Optional
 
+from repro.core.segstore import SegmentStore
 from repro.core.transport import Transport
 
 
 class RemoteNVMServer:
+    """Remote NVM target. Backed by the same segment-log engine as
+    Assise's areas (an RDMA WRITE to NVM is durable on arrival, so each
+    put commits) — baselines differ in architecture, not engine."""
+
     def __init__(self, node_id: str, root: str, transport: Transport):
         self.node_id = node_id
-        os.makedirs(root, exist_ok=True)
-        self.data: Dict[str, bytes] = {}
+        self.store = SegmentStore(root)
         transport.register_endpoint(node_id, self)
 
     def put(self, path: str, data: bytes) -> None:
-        self.data[path] = data
+        self.store.put(path, data)
+        self.store.commit()
 
     def get(self, path: str) -> Optional[bytes]:
-        return self.data.get(path)
+        return self.store.get(path)
 
     def delete(self, path: str) -> None:
-        self.data.pop(path, None)
+        self.store.delete(path)
 
     def rename(self, src: str, dst: str) -> None:
-        if src in self.data:
-            self.data[dst] = self.data.pop(src)
+        self.store.rename(src, dst)
 
 
 class NoCacheClient:

@@ -84,6 +84,35 @@ def test_coalesce_drops_superseded_puts():
     assert [e.seqno for e in out] == [2, 4]
 
 
+def test_coalesce_put_then_delete_drops_put_keeps_delete():
+    """The PUT is dead weight; the DELETE must survive because lower
+    tiers may still hold an older value for the path."""
+    es = [Entry(1, L.OP_PUT, "/a", b"1"), Entry(2, L.OP_DELETE, "/a", b""),
+          Entry(3, L.OP_PUT, "/b", b"2")]
+    out = UpdateLog.coalesce(es)
+    assert [e.seqno for e in out] == [2, 3]
+    assert out[0].op == L.OP_DELETE
+
+
+def test_coalesce_put_delete_put_keeps_final_put():
+    es = [Entry(1, L.OP_PUT, "/a", b"1"), Entry(2, L.OP_DELETE, "/a", b""),
+          Entry(3, L.OP_PUT, "/a", b"2")]
+    out = UpdateLog.coalesce(es)
+    assert [e.seqno for e in out] == [2, 3]
+    assert out[-1].data == b"2"
+
+
+def test_coalesce_rename_pins_src_and_dst_history():
+    """A rename pins prior PUTs of src (the bytes move to dst) and
+    clears dst history, so later PUTs to either path drop nothing."""
+    es = [Entry(1, L.OP_PUT, "/a", b"1"), Entry(2, L.OP_PUT, "/b", b"old"),
+          Entry(3, L.OP_RENAME, "/a", b"/b"),
+          Entry(4, L.OP_PUT, "/a", b"new-a"),
+          Entry(5, L.OP_PUT, "/b", b"new-b")]
+    out = UpdateLog.coalesce(es)
+    assert [e.seqno for e in out] == [1, 2, 3, 4, 5]
+
+
 def test_coalesce_respects_rename():
     es = [Entry(1, L.OP_PUT, "/a", b"1"),
           Entry(2, L.OP_RENAME, "/a", b"/b"),
@@ -92,7 +121,70 @@ def test_coalesce_respects_rename():
     assert [e.seqno for e in out] == [1, 2, 3]  # nothing droppable
 
 
+def test_encoded_since_matches_per_entry_encode(tmp_path):
+    """The indexed replication path: one contiguous pre-encoded slice
+    must be byte-identical to re-encoding every pending entry."""
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    for i in range(10):
+        lg.append(L.OP_PUT, f"/k{i}", bytes([i]) * 20)
+    for since in (0, 3, 9, 10, 50):
+        want = b"".join(e.encode() for e in lg._entries
+                        if e.seqno > since)
+        assert lg.encoded_since(since) == want
+        assert decode_stream(lg.encoded_since(since)) == \
+            lg.entries_since(since)
+
+
+def test_encoded_since_after_truncate_rotation(tmp_path):
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    for i in range(8):
+        lg.append(L.OP_PUT, f"/k{i}", b"v")
+    lg.truncate_through(5)  # rotates suffix into a fresh segment
+    assert [e.seqno for e in lg.entries_since(0)] == [6, 7, 8]
+    want = b"".join(e.encode() for e in lg.entries_since(6))
+    assert lg.encoded_since(6) == want
+    # the rotated backing file holds exactly the undigested suffix
+    assert os.path.getsize(lg.path) == sum(
+        e.nbytes for e in lg.entries_since(0))
+    lg.append(L.OP_PUT, "/tail", b"t")
+    assert lg.encoded_since(8) == lg._entries[-1].encode()
+
+
+def test_truncate_rotation_survives_reopen(tmp_path):
+    p = str(tmp_path / "l" / "a.log")
+    lg = UpdateLog(p)
+    for i in range(6):
+        lg.append(L.OP_PUT, f"/k{i}", b"x" * 10)
+    lg.truncate_through(4)
+    lg.persist()
+    lg.close()
+    lg2 = UpdateLog(p)
+    assert [e.seqno for e in lg2.entries_since(0)] == [5, 6]
+    assert lg2.index["/k5"] == b"x" * 10
+    assert lg2.append(L.OP_PUT, "/n", b"y").seqno == 7
+
+
 def test_decode_stream_rejects_bad_crc():
     e = Entry(1, L.OP_PUT, "/a", b"hello").encode()
     bad = e[:-3] + b"zzz"
     assert decode_stream(bad) == []
+
+
+def test_replica_slot_repairs_torn_tail_on_recovery(tmp_path):
+    """A torn one-sided write must be cut at recovery so entries acked
+    *afterwards* stay decodable on the next recovery."""
+    from repro.core.replication import ReplicaSlot
+    p = str(tmp_path / "s" / "p.log")
+    slot = ReplicaSlot(p)
+    slot.write(None, Entry(1, L.OP_PUT, "/a", b"1").encode())
+    slot.write(None, Entry(2, L.OP_PUT, "/b", b"2").encode()[:-5])  # torn
+    slot.close()
+    slot2 = ReplicaSlot(p)  # crash + failover: tear is repaired
+    assert slot2.acked_seqno == 1
+    slot2.write(None, Entry(2, L.OP_PUT, "/b", b"v2").encode())
+    assert slot2.mirror["/b"] == b"v2"
+    slot2.close()
+    slot3 = ReplicaSlot(p)  # post-repair appends survive re-recovery
+    assert slot3.acked_seqno == 2
+    assert slot3.mirror["/b"] == b"v2"
+    assert slot3.mirror["/a"] == b"1"

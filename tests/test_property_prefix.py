@@ -12,7 +12,10 @@ from any old value.
 """
 import os
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import log as L
 from repro.core.log import Entry, UpdateLog, decode_stream

@@ -1,0 +1,195 @@
+"""SegmentStore: needle roundtrip, rotation, crash recovery (prefix
+semantics), compaction, and Area-API parity."""
+import os
+
+from repro.core.segstore import _NEEDLE, FileArea, SegmentStore
+
+
+def _segs(root):
+    return sorted(f for f in os.listdir(root)
+                  if f.startswith("seg-") and f.endswith(".log"))
+
+
+def test_put_get_delete_rename_roundtrip(tmp_path):
+    s = SegmentStore(str(tmp_path / "a"))
+    s.put("/x", b"one")
+    s.put("/y", b"two")
+    assert s.get("/x") == b"one"
+    assert s.contains("/y") and not s.contains("/z")
+    s.rename("/x", "/z")
+    assert s.get("/x") is None
+    assert s.get("/z") == b"one"
+    s.delete("/y")
+    assert s.get("/y") is None
+    assert sorted(s.paths()) == ["/z"]
+    assert s.bytes == 3
+
+
+def test_persistence_roundtrip(tmp_path):
+    root = str(tmp_path / "a")
+    s = SegmentStore(root)
+    for i in range(20):
+        s.put(f"/k{i}", bytes([i]) * 100)
+    s.rename("/k0", "/r0")
+    s.delete("/k1")
+    s.commit()
+    s.close()
+    s2 = SegmentStore(root)
+    assert s2.get("/r0") == b"\x00" * 100
+    assert s2.get("/k1") is None
+    assert s2.get("/k7") == bytes([7]) * 100
+    assert s2.bytes == s.bytes
+
+
+def test_overwrite_updates_live_bytes(tmp_path):
+    s = SegmentStore(str(tmp_path / "a"))
+    s.put("/x", b"a" * 1000)
+    s.put("/x", b"b" * 10)
+    assert s.bytes == 10
+    assert s.get("/x") == b"b" * 10
+    assert s.dead_bytes > 1000  # superseded needle counted dead
+
+
+def test_segment_rotation(tmp_path):
+    root = str(tmp_path / "a")
+    s = SegmentStore(root, segment_bytes=1024)
+    for i in range(16):
+        s.put(f"/k{i}", b"v" * 512)
+    s.commit()
+    assert len(_segs(root)) > 1  # rotated past the threshold
+    for i in range(16):
+        assert s.get(f"/k{i}") == b"v" * 512
+    s.close()
+    s2 = SegmentStore(root, segment_bytes=1024)
+    for i in range(16):
+        assert s2.get(f"/k{i}") == b"v" * 512
+
+
+def test_torn_final_needle_dropped(tmp_path):
+    """Prefix semantics: a torn tail needle disappears, the prefix
+    survives, and appends continue cleanly afterwards."""
+    root = str(tmp_path / "a")
+    s = SegmentStore(root)
+    for i in range(5):
+        s.put(f"/k{i}", b"v" * 64)
+    s.commit()
+    s.close()
+    seg = os.path.join(root, _segs(root)[-1])
+    with open(seg, "rb+") as f:
+        f.truncate(os.path.getsize(seg) - 7)  # tear the last needle
+    s2 = SegmentStore(root)
+    assert s2.get("/k4") is None
+    assert s2.get("/k3") == b"v" * 64
+    s2.put("/k9", b"fresh")
+    s2.commit()
+    s2.close()
+    s3 = SegmentStore(root)
+    assert s3.get("/k9") == b"fresh"
+    assert s3.get("/k3") == b"v" * 64
+
+
+def test_corrupt_needle_cuts_segment_history(tmp_path):
+    root = str(tmp_path / "a")
+    s = SegmentStore(root)
+    for i in range(5):
+        s.put(f"/k{i}", b"data-" * 10)
+    s.commit()
+    s.close()
+    seg = os.path.join(root, _segs(root)[-1])
+    size = os.path.getsize(seg)
+    with open(seg, "rb+") as f:
+        f.seek(size // 2)
+        f.write(b"\xff\xff\xff")
+    s2 = SegmentStore(root)
+    live = sorted(s2.paths())
+    assert live == [f"/k{i}" for i in range(len(live))]  # exact prefix
+    assert len(live) < 5
+
+
+def test_compaction_reclaims_dead_bytes_and_preserves_index(tmp_path):
+    root = str(tmp_path / "a")
+    s = SegmentStore(root, segment_bytes=4096, compact_min_dead=1,
+                     compact_dead_ratio=0.25)
+    for i in range(8):
+        s.put(f"/k{i}", bytes([i]) * 256)
+    for _ in range(20):  # churn one key: mostly dead bytes
+        s.put("/k0", b"z" * 256)
+    assert s.compactions >= 1
+    assert s.dead_bytes <= 0.5 * s.disk_bytes
+    for i in range(1, 8):
+        assert s.get(f"/k{i}") == bytes([i]) * 256
+    assert s.get("/k0") == b"z" * 256
+    s.close()
+    s2 = SegmentStore(root)  # compacted layout recovers identically
+    for i in range(1, 8):
+        assert s2.get(f"/k{i}") == bytes([i]) * 256
+    assert s2.get("/k0") == b"z" * 256
+
+
+def test_explicit_compact_shrinks_disk(tmp_path):
+    root = str(tmp_path / "a")
+    s = SegmentStore(root, segment_bytes=2048,
+                     compact_min_dead=1 << 40)  # never auto-compact
+    for i in range(10):
+        s.put("/hot", b"x" * 512)
+        s.put(f"/cold{i}", b"y" * 64)
+    before = s.disk_bytes
+    s.compact()
+    assert s.disk_bytes < before
+    assert s.dead_bytes == 0
+    assert s.get("/hot") == b"x" * 512
+    for i in range(10):
+        assert s.get(f"/cold{i}") == b"y" * 64
+
+
+def test_delete_tombstone_survives_reopen(tmp_path):
+    root = str(tmp_path / "a")
+    s = SegmentStore(root)
+    s.put("/gone", b"v")
+    s.commit()
+    s.delete("/gone")
+    s.commit()
+    s.close()
+    s2 = SegmentStore(root)
+    assert s2.get("/gone") is None
+    assert not s2.contains("/gone")
+
+
+def test_lru_victims_orders_by_recency(tmp_path):
+    s = SegmentStore(str(tmp_path / "a"), capacity=1000)
+    s.put("/old", b"a" * 400)
+    s.put("/mid", b"b" * 400)
+    s.put("/new", b"c" * 400)
+    s.get("/old")  # refresh: /mid is now coldest
+    victims = s.lru_victims(400)
+    assert victims[0] == "/mid"
+
+
+def test_needle_value_offsets_are_exact(tmp_path):
+    """The index addresses the value bytes directly (zero-copy pread)."""
+    s = SegmentStore(str(tmp_path / "a"))
+    s.put("/p", b"PAYLOAD")
+    seg_id, voff, vlen = s.index["/p"]
+    assert vlen == 7
+    assert voff == _NEEDLE.size + len(b"/p")
+    s.commit()
+    with open(os.path.join(s.root, f"seg-{seg_id:08d}.log"), "rb") as f:
+        f.seek(voff)
+        assert f.read(vlen) == b"PAYLOAD"
+
+
+def test_filearea_parity(tmp_path):
+    """Legacy engine and segment engine agree on the Area contract."""
+    ops = [("put", "/a", b"1"), ("put", "/b", b"22"),
+           ("put", "/a", b"333"), ("rename", "/a", "/c"),
+           ("delete", "/b", None), ("put", "/d", b"4444")]
+    stores = [FileArea(str(tmp_path / "f")),
+              SegmentStore(str(tmp_path / "s"))]
+    for kind, a, b in ops:
+        for st in stores:
+            getattr(st, kind)(*(x for x in (a, b) if x is not None))
+    f, s = stores
+    assert sorted(f.paths()) == sorted(s.paths())
+    assert f.bytes == s.bytes
+    for p in f.paths():
+        assert f.get(p) == s.get(p)

@@ -45,6 +45,27 @@ def test_eviction_to_cold(tmp_path):
     c.close()
 
 
+def test_hot_disk_footprint_bounded_by_compaction(tmp_path):
+    """Overwrite churn must not let the hot tier's on-disk segment
+    bytes silently outgrow the modeled NVM capacity: live bytes fit,
+    so dead needles are compacted away instead of evicting."""
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=2, replication=1,
+                      hot_capacity=64 * 1024)
+    ls = c.open_process("p1")
+    for r in range(10):  # 80KB appended over time, only 8KB ever live
+        for i in range(8):
+            ls.put(f"/churn/{i}", bytes([r]) * 1024)
+        ls.digest()
+    sfs = ls.sfs
+    assert sfs.hot.bytes <= sfs.hot.capacity
+    assert sfs.stats["evictions"] == 0  # churn is not working-set growth
+    assert sfs.hot.compactions >= 1
+    assert sfs.hot.disk_bytes <= sfs.hot.capacity
+    for i in range(8):
+        assert ls.get(f"/churn/{i}") == bytes([9]) * 1024
+    c.close()
+
+
 def test_permissions_enforced(tmp_cluster):
     ls = tmp_cluster.open_process("p1")
     ls.sfs.set_permission("/secure", read=True, write=False)
