@@ -1,0 +1,98 @@
+"""Perf-trajectory guard: diff key rows between two BENCH_*.json dumps.
+
+Each PR commits a ``BENCH_<n>.json`` produced by ``benchmarks/run.py
+--json`` on the same machine as its predecessor. This tool compares the
+measured ``us_per_call`` of key rows (``fig10.*``, ``table1.*``,
+``fig12.*`` by default) between an OLD and NEW dump and exits non-zero
+when any row regressed by more than ``--max-ratio`` (default 2x).
+
+CI runs ``--latest-two``, which picks the two highest-numbered committed
+``BENCH_*.json`` files — a deterministic file diff, immune to CI-runner
+speed variance. With fewer than two dumps committed it passes trivially.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def latest_two(root: str = "."):
+    found = []
+    for fn in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(fn))
+        if m:
+            found.append((int(m.group(1)), fn))
+    found.sort()
+    return [fn for _, fn in found[-2:]]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", metavar="OLD NEW",
+                    help="two BENCH_*.json files to compare")
+    ap.add_argument("--latest-two", action="store_true",
+                    help="compare the two highest-numbered BENCH_*.json "
+                         "in the repo root")
+    ap.add_argument("--prefixes", default="fig10.,table1.,fig12.",
+                    help="comma-separated row-name prefixes to guard")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when new/old us_per_call exceeds this")
+    args = ap.parse_args()
+
+    if args.latest_two:
+        files = latest_two()
+        if len(files) < 2:
+            print("compare: fewer than two BENCH_*.json committed; "
+                  "nothing to diff")
+            return 0
+    elif len(args.files) == 2:
+        files = args.files
+    else:
+        ap.error("pass OLD NEW or --latest-two")
+    old_path, new_path = files
+    old, new = load_rows(old_path), load_rows(new_path)
+    prefixes = tuple(p for p in args.prefixes.split(",") if p)
+
+    print(f"comparing {old_path} -> {new_path} "
+          f"(prefixes={','.join(prefixes)} max-ratio={args.max_ratio}x)")
+    regressed, compared, missing = [], 0, 0
+    for name in sorted(set(old) | set(new)):
+        if not name.startswith(prefixes):
+            continue
+        if name not in old or old[name] <= 0:
+            print(f"  NEW     {name}: {new[name]:.2f}us")
+            continue
+        if name not in new:
+            # guard coverage narrowed (bench removed/renamed): say so
+            # loudly even though it is not a timing regression
+            print(f"  MISSING {name}: was {old[name]:.2f}us, "
+                  f"absent from {new_path}")
+            missing += 1
+            continue
+        ratio = new[name] / old[name]
+        compared += 1
+        flag = " REGRESSION" if ratio > args.max_ratio else ""
+        print(f"  {name}: {old[name]:.2f} -> {new[name]:.2f}us "
+              f"({ratio:.2f}x){flag}")
+        if flag:
+            regressed.append(name)
+    print(f"compare: {compared} rows compared, {missing} missing, "
+          f"{len(regressed)} regressed")
+    if regressed:
+        print("FAILED rows: " + ", ".join(regressed), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,9 +11,10 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
-    ap.add_argument("--json", default="", metavar="BENCH_1.json",
+    ap.add_argument("--json", default="", metavar="BENCH_2.json",
                     help="also dump all rows as JSON (perf trajectory "
-                         "across PRs)")
+                         "across PRs; benchmarks/compare.py diffs "
+                         "successive dumps in CI)")
     args = ap.parse_args()
     from benchmarks import common, paper, train_ckpt
     benches = paper.ALL + train_ckpt.ALL

@@ -36,12 +36,15 @@ def bench_train_ckpt():
             prefix=f"/ck/{tag}", delta=delta, mode="optimistic", delta_block=4096))
         ck.save(0, st)
         st2 = _fake_state(sparse_frac=0.02, prev=st)
+        b0 = store.transport.stats.bytes_sent
         t0 = time.perf_counter()
         ck.save(1, st2)
         dt = time.perf_counter() - t0
+        repl = store.transport.stats.bytes_sent - b0
         row(f"train_ckpt.save_{tag}", dt * 1e6,
             f"logged={ck.stats['bytes_logged'] / 1e6:.1f}MB of "
-            f"{ck.stats['bytes_full'] / 1e6:.1f}MB")
+            f"{ck.stats['bytes_full'] / 1e6:.1f}MB "
+            f"replicated={repl / 1e6:.1f}MB")
     # failover restore
     ck = AssiseCheckpointer(store, CheckpointConfig(prefix="/ck/full",
                                                     delta=False))

@@ -4,12 +4,22 @@ Each worker owns a LibState (colocated persistent cache + chain
 replication). A checkpoint is a set of *per-tensor-shard* PUTs — the
 operation granularity the paper advocates — followed by a manifest PUT
 and an fsync (pessimistic: survives the worker AND its node) or dsync
-(optimistic: coalesced; bounded at-risk window). Prefix semantics make
-the manifest write the atomic commit point: a restore only ever sees a
-fully-written checkpoint.
+(optimistic: coalesced; bounded at-risk window). In full mode prefix
+semantics make the manifest write the atomic commit point: a restore
+only ever sees a fully-written checkpoint.
 
 Delta mode logs only changed blocks vs. the previous step (redundant-
 write elimination for sparse-update tensors: embeddings, cold experts).
+Each leaf lives at a **stable key** and a step's changes are emitted as
+``LibState.write`` byte-range writes straight from the changed-block
+bitmap — the Pallas ``delta_mask`` kernel output when available (indices
+× block → offsets), the host scan otherwise. Only the changed ranges
+are logged, replicated, and digested; the tradeoff vs per-step blobs is
+that in-place deltas make only the *latest* step restorable (older
+manifests are kept solely as the commit-point protocol's history), and
+a crash mid-save can leave a newer step's partial patches on the stable
+keys — manifests carry per-leaf CRCs so ``restore`` detects that and
+returns None instead of silently corrupt tensors.
 
 Restore order (the paper's failover story): process-local log ->
 node-local hot area -> chain replica NVM -> cold storage — sub-second
@@ -19,16 +29,66 @@ from __future__ import annotations
 
 import io
 import json
-import pickle
 import threading
 import time
+import zlib
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.ckpt.delta import block_delta_apply, block_delta_encode
+from repro.ckpt.delta import changed_blocks, changed_extents
 from repro.core.store import LibState
+
+_KERNEL_BPT = 8
+_kernel_ok = True  # flips off after the first failed Pallas attempt
+FORCE_KERNEL = False  # tests: exercise the kernel path on CPU (interpret)
+
+
+def _kernel_wanted() -> bool:
+    """The Pallas scan is the compiled on-device path; in interpret mode
+    (CPU container) it is correctness-only and far slower than the host
+    scan, so it is used on TPU or when explicitly forced."""
+    if FORCE_KERNEL:
+        return True
+    if not _kernel_ok:
+        return False
+    import sys
+    if "jax" not in sys.modules:
+        return False  # a TPU training process has jax loaded already;
+        # don't pay the import just to ask the backend
+    try:
+        return sys.modules["jax"].default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _changed_block_idxs(new: bytes, old: bytes, block: int) -> List[int]:
+    """Changed-block bitmap: Pallas ``delta_mask`` on the tile-aligned
+    prefix (on-device scan before D2H in a real deployment), host scan
+    for the tail / when the kernel or backend is unavailable."""
+    global _kernel_ok
+    tile = block * _KERNEL_BPT
+    aligned = (len(new) // tile) * tile
+    idxs: List[int] = []
+    if aligned and _kernel_wanted():
+        try:
+            import jax.numpy as jnp
+
+            from repro.kernels.ops import delta_mask
+            nv = np.frombuffer(new[:aligned], np.uint8)
+            ov = np.frombuffer(old[:aligned], np.uint8)
+            mask = np.asarray(delta_mask(jnp.asarray(nv), jnp.asarray(ov),
+                                         block=block, bpt=_KERNEL_BPT))
+            idxs = np.nonzero(mask)[0].tolist()
+        except Exception:  # missing/broken accelerator stack: host path
+            _kernel_ok = False
+            aligned = 0
+    else:
+        aligned = 0
+    first_tail = aligned // block
+    tail = changed_blocks(new[aligned:], old[aligned:], block)
+    return idxs + [i + first_tail for i in tail]
 
 
 @dataclass(frozen=True)
@@ -75,6 +135,11 @@ class AssiseCheckpointer:
         self.stats = {"bytes_full": 0, "bytes_logged": 0, "saves": 0,
                       "commit_s": 0.0}
 
+    def _leaf_key(self, step: int, name: str) -> str:
+        if self.cfg.delta:  # stable key: steps patch it in place
+            return f"{self.cfg.prefix}/data{name}"
+        return f"{self.cfg.prefix}/data/{step}{name}"
+
     # -- save ----------------------------------------------------------------
     def save(self, step: int, state: Any, extra: Optional[dict] = None):
         """Write one checkpoint. state: pytree of arrays (numpy/JAX)."""
@@ -82,21 +147,25 @@ class AssiseCheckpointer:
         t0 = time.monotonic()
         leaves = _flatten(state)
         manifest = {"step": step, "leaves": sorted(leaves),
-                    "extra": extra or {}, "delta_base": None}
+                    "extra": extra or {},
+                    "format": "range" if self.cfg.delta else "full",
+                    "leaf_crc": {}}
         new_prev = {}
         for name, arr in leaves.items():
             raw = _encode_leaf(np.asarray(arr))
+            manifest["leaf_crc"][name] = zlib.crc32(raw) & 0xFFFFFFFF
             self.stats["bytes_full"] += len(raw)
-            key = f"{self.cfg.prefix}/data/{step}{name}"
-            if self.cfg.delta and name in self._prev:
-                wire, nch = block_delta_encode(raw, self._prev[name],
-                                               self.cfg.delta_block)
-                if len(wire) < len(raw):
-                    self.store.put(key + ".delta", wire)
-                    manifest.setdefault("deltas", []).append(name)
-                    manifest["delta_base"] = self._saved_steps[-1] \
-                        if self._saved_steps else None
-                    self.stats["bytes_logged"] += len(wire)
+            key = self._leaf_key(step, name)
+            old = self._prev.get(name) if self.cfg.delta else None
+            if old is not None and len(old) == len(raw):
+                idxs = _changed_block_idxs(raw, old, self.cfg.delta_block)
+                extents = changed_extents(raw, old, self.cfg.delta_block,
+                                          idxs=idxs)
+                if sum(ln for _, ln in extents) < len(raw):
+                    for off, ln in extents:  # range writes: the paper's
+                        # op-granularity — only changed bytes hit the log
+                        self.store.write(key, raw[off:off + ln], off)
+                        self.stats["bytes_logged"] += ln
                 else:
                     self.store.put(key, raw)
                     self.stats["bytes_logged"] += len(raw)
@@ -139,14 +208,11 @@ class AssiseCheckpointer:
             if man is None:
                 continue
             m = json.loads(man)
-            # only GC checkpoints nothing deltas against
-            if any(s != old for s in self._saved_steps[:1]) and \
-                    m.get("deltas"):
-                continue
-            for name in m["leaves"]:
-                self.store.delete(f"{self.cfg.prefix}/data/{old}{name}")
-                self.store.delete(
-                    f"{self.cfg.prefix}/data/{old}{name}.delta")
+            if m.get("format") != "range":
+                # per-step leaves are private to this checkpoint
+                for name in m["leaves"]:
+                    self.store.delete(f"{self.cfg.prefix}/data/{old}{name}")
+            # range mode: leaves live at stable keys shared by every step
             self.store.delete(f"{self.cfg.prefix}/MANIFEST.{old}")
 
     # -- restore ------------------------------------------------------------
@@ -155,7 +221,11 @@ class AssiseCheckpointer:
         return int(v) if v is not None else None
 
     def restore(self, step: Optional[int] = None):
-        """Returns (state_dict {name: np.ndarray}, manifest) or None."""
+        """Returns (state_dict {name: np.ndarray}, manifest) or None.
+
+        Range-format checkpoints patch stable keys in place, so only
+        the step the manifests agree is latest can be reassembled;
+        asking for an older range-format step returns None."""
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -165,33 +235,25 @@ class AssiseCheckpointer:
         if man is None:
             return None
         m = json.loads(man)
-        deltas = set(m.get("deltas", []))
+        if m.get("format") == "range" and step != self.latest_step():
+            return None  # stable keys already carry later steps' ranges
         out = {}
+        crcs = m.get("leaf_crc", {})
         for name in m["leaves"]:
-            key = f"{self.cfg.prefix}/data/{step}{name}"
-            if name in deltas:
-                wire = self.store.get(key + ".delta")
-                base_step = m["delta_base"]
-                base = self._restore_leaf_raw(base_step, name) \
-                    if base_step is not None else None
-                raw = block_delta_apply(wire, base)
-            else:
-                raw = self.store.get(key)
+            key = f"{self.cfg.prefix}/data{name}" \
+                if m.get("format") == "range" \
+                else f"{self.cfg.prefix}/data/{step}{name}"
+            raw = self.store.get(key)
+            if raw is None:
+                return None
+            if m.get("format") == "range" and name in crcs \
+                    and (zlib.crc32(raw) & 0xFFFFFFFF) != crcs[name]:
+                # a crash mid-save left partial range patches of a NEWER
+                # step on the stable key: the set is unrestorable — fail
+                # loudly rather than hand back silently corrupt tensors
+                return None
             out[name] = _decode_leaf(raw)
         return out, m
-
-    def _restore_leaf_raw(self, step: int, name: str) -> Optional[bytes]:
-        man = self.store.get(f"{self.cfg.prefix}/MANIFEST.{step}")
-        if man is None:
-            return None
-        m = json.loads(man)
-        key = f"{self.cfg.prefix}/data/{step}{name}"
-        if name in set(m.get("deltas", [])):
-            wire = self.store.get(key + ".delta")
-            base = self._restore_leaf_raw(m["delta_base"], name) \
-                if m["delta_base"] is not None else None
-            return block_delta_apply(wire, base)
-        return self.store.get(key)
 
 
 def unflatten_into(template: Any, flat: Dict[str, np.ndarray],

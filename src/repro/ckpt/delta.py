@@ -40,6 +40,31 @@ def changed_blocks(new: bytes, old: Optional[bytes],
     return np.nonzero(diff)[0].tolist()
 
 
+def changed_extents(new: bytes, old: Optional[bytes], block: int,
+                    idxs: Optional[List[int]] = None
+                    ) -> List[Tuple[int, int]]:
+    """Changed-block indices merged into byte ranges: ``(offset, length)``
+    runs of consecutive changed blocks, clamped to ``len(new)``. This is
+    the bridge from a changed-block bitmap (host scan or the Pallas
+    ``delta_mask`` kernel) to ``LibState.write`` range writes."""
+    if idxs is None:
+        idxs = changed_blocks(new, old, block)
+    runs: List[Tuple[int, int]] = []
+    start = prev = None
+    for i in idxs:
+        if prev is not None and i == prev + 1:
+            prev = i
+            continue
+        if start is not None:
+            runs.append((start * block,
+                         min((prev + 1) * block, len(new)) - start * block))
+        start = prev = i
+    if start is not None:
+        runs.append((start * block,
+                     min((prev + 1) * block, len(new)) - start * block))
+    return runs
+
+
 def block_delta_encode(new: bytes, old: Optional[bytes],
                        block: int = 1 << 16) -> Tuple[bytes, int]:
     """Returns (wire_bytes, n_changed_blocks)."""

@@ -8,15 +8,16 @@ Public surface:
   ClusterManager — membership, epochs, chains, lease root
 """
 from repro.core.cluster import ClusterManager
+from repro.core.extents import ExtentOverlay, splice
 from repro.core.harness import AssiseCluster
 from repro.core.log import (Entry, UpdateLog, OP_DELETE, OP_PUT, OP_RENAME,
-                            decode_stream)
+                            OP_WRITE, decode_stream)
 from repro.core.segstore import FileArea, SegmentStore
 from repro.core.sharedfs import SharedFS
 from repro.core.store import LibState, recover_process
 from repro.core.transport import Transport, NodeDown
 
-__all__ = ["AssiseCluster", "ClusterManager", "Entry", "FileArea",
-           "LibState", "NodeDown", "SegmentStore", "SharedFS", "Transport",
-           "UpdateLog", "OP_PUT", "OP_DELETE", "OP_RENAME", "decode_stream",
-           "recover_process"]
+__all__ = ["AssiseCluster", "ClusterManager", "Entry", "ExtentOverlay",
+           "FileArea", "LibState", "NodeDown", "SegmentStore", "SharedFS",
+           "Transport", "UpdateLog", "OP_PUT", "OP_DELETE", "OP_RENAME",
+           "OP_WRITE", "decode_stream", "recover_process", "splice"]

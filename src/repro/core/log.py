@@ -7,9 +7,17 @@ increasing seqno, so replay after a crash recovers exactly the maximal
 verifiable **prefix** of the write history (prefix semantics), stopping
 at the first torn/corrupt record.
 
+``OP_WRITE`` is the byte-range write: the entry carries an ``offset``
+and only the written bytes, so a 64-byte update to a 4 MB object logs
+(and replicates, and digests) 64 bytes. A whole-value ``OP_PUT`` is the
+degenerate case (offset 0, full length). The log hashtable holds an
+``ExtentOverlay`` for paths whose base value lives below the log.
+
 ``coalesce`` implements the optimistic-mode redundant-write elimination
 (paper §3.3 / Strata): superseded PUTs to the same path are dropped when
-no intervening rename/delete touches that path.
+no intervening rename/delete touches that path; range writes fold into a
+pending PUT of the same path, and overlapping/adjacent ranges merge into
+one entry instead of shipping each write separately.
 """
 from __future__ import annotations
 
@@ -18,15 +26,20 @@ import os
 import struct
 import zlib
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
+
+from repro.core.extents import apply_range_write, splice
 
 MAGIC = 0xA551_5E00
 OP_PUT = 1
 OP_DELETE = 2
 OP_RENAME = 3
 OP_TXN = 4  # transaction barrier wrapping a coalesced replication batch
+OP_WRITE = 5  # byte-range write: data patched at Entry.offset
 
-_HDR = struct.Struct("<IQBHIi")  # magic, seqno, op, path_len, data_len, crc
+# magic, seqno, op, path_len, data_len, offset, crc
+_HDR = struct.Struct("<IQBHIQi")
+_OFF = struct.Struct("<Q")
 
 
 @dataclass(frozen=True)
@@ -35,12 +48,13 @@ class Entry:
     op: int
     path: str
     data: bytes
+    offset: int = 0  # byte offset for OP_WRITE; 0 for whole-value ops
 
     def encode(self) -> bytes:
         p = self.path.encode()
-        crc = zlib.crc32(p + self.data) & 0x7FFFFFFF
+        crc = zlib.crc32(_OFF.pack(self.offset) + p + self.data) & 0x7FFFFFFF
         return _HDR.pack(MAGIC, self.seqno, self.op, len(p), len(self.data),
-                         crc) + p + self.data
+                         self.offset, crc) + p + self.data
 
     @property
     def nbytes(self) -> int:
@@ -52,7 +66,7 @@ def decode_stream(buf: bytes) -> List[Entry]:
     out, off = [], 0
     n = len(buf)
     while off + _HDR.size <= n:
-        magic, seqno, op, plen, dlen, crc = _HDR.unpack_from(buf, off)
+        magic, seqno, op, plen, dlen, eoff, crc = _HDR.unpack_from(buf, off)
         if magic != MAGIC:
             break
         end = off + _HDR.size + plen + dlen
@@ -60,9 +74,9 @@ def decode_stream(buf: bytes) -> List[Entry]:
             break  # torn write
         p = buf[off + _HDR.size: off + _HDR.size + plen]
         d = buf[off + _HDR.size + plen: end]
-        if (zlib.crc32(p + d) & 0x7FFFFFFF) != crc:
+        if (zlib.crc32(_OFF.pack(eoff) + p + d) & 0x7FFFFFFF) != crc:
             break  # corruption: cut the history here
-        out.append(Entry(seqno, op, p.decode(), bytes(d)))
+        out.append(Entry(seqno, op, p.decode(), bytes(d), eoff))
         off = end
     return out
 
@@ -102,8 +116,9 @@ class UpdateLog:
         self._recover_from_file()
 
     # -- append path --------------------------------------------------------
-    def append(self, op: int, path: str, data: bytes = b"") -> Entry:
-        e = Entry(self._next_seq, op, path, data)
+    def append(self, op: int, path: str, data: bytes = b"",
+               offset: int = 0) -> Entry:
+        e = Entry(self._next_seq, op, path, data, offset)
         self._next_seq += 1
         enc = e.encode()
         self._f.write(enc)
@@ -126,6 +141,8 @@ class UpdateLog:
             self.index[e.path] = e.data
         elif e.op == OP_DELETE:
             self.index[e.path] = None  # tombstone: authoritative miss
+        elif e.op == OP_WRITE:
+            apply_range_write(self.index, e.path, e.offset, e.data)
         elif e.op == OP_RENAME:
             dst = e.data.decode()
             val = self.index.get(e.path)
@@ -155,27 +172,72 @@ class UpdateLog:
 
     @staticmethod
     def coalesce(entries: Iterable[Entry]) -> List[Entry]:
-        """Drop superseded PUTs (optimistic-mode bandwidth elimination)."""
+        """Drop superseded PUTs and merge byte ranges (optimistic-mode
+        bandwidth elimination).
+
+        Range rules: an OP_WRITE folds into a pending PUT of the same
+        path (the PUT's bytes are patched; one entry ships); overlapping
+        or adjacent OP_WRITEs merge into a single range entry; a PUT or
+        DELETE kills every pending range for the path. Disjoint ranges
+        are kept as-is — merging them would fabricate the gap bytes.
+        """
         entries = list(entries)
-        keep = [True] * len(entries)
-        last_put = {}  # path -> idx of latest PUT
+        kept: List[Optional[Entry]] = list(entries)
+        last_put: Dict[str, int] = {}     # path -> idx of pending PUT
+        ranges: Dict[str, List[int]] = {}  # path -> idxs of pending WRITEs
         for i, e in enumerate(entries):
             if e.op == OP_PUT:
                 j = last_put.get(e.path)
                 if j is not None:
-                    keep[j] = False
+                    kept[j] = None
+                for j in ranges.pop(e.path, []):
+                    kept[j] = None
                 last_put[e.path] = i
+            elif e.op == OP_WRITE:
+                j = last_put.get(e.path)
+                if j is not None:
+                    # fold the range into the pending PUT (single entry)
+                    kept[i] = Entry(e.seqno, OP_PUT, e.path,
+                                    splice(kept[j].data, e.offset, e.data))
+                    kept[j] = None
+                    last_put[e.path] = i
+                    continue
+                cur = e
+                pend = ranges.setdefault(e.path, [])
+                merged = True
+                while merged:  # each merge widens cur; rescan until stable
+                    merged = False
+                    for j in list(pend):
+                        w = kept[j]
+                        ws, we = w.offset, w.offset + len(w.data)
+                        cs, ce = cur.offset, cur.offset + len(cur.data)
+                        if we < cs or ws > ce:
+                            continue  # disjoint, not even adjacent
+                        s = min(ws, cs)
+                        buf = bytearray(max(we, ce) - s)
+                        buf[ws - s:we - s] = w.data   # earlier: under
+                        buf[cs - s:ce - s] = cur.data  # later wins
+                        cur = Entry(cur.seqno, OP_WRITE, e.path,
+                                    bytes(buf), s)
+                        kept[j] = None
+                        pend.remove(j)
+                        merged = True
+                kept[i] = cur
+                pend.append(i)
             elif e.op == OP_DELETE:
-                # PUT then DELETE: the PUT is dead weight; the DELETE
-                # stays (lower tiers may still hold an older value).
+                # PUT/WRITE then DELETE: the updates are dead weight; the
+                # DELETE stays (lower tiers may still hold an older value).
                 j = last_put.pop(e.path, None)
                 if j is not None:
-                    keep[j] = False
+                    kept[j] = None
+                for j in ranges.pop(e.path, []):
+                    kept[j] = None
             elif e.op == OP_RENAME:
-                # rename pins prior PUTs of src (they move), clears dst hist
-                last_put.pop(e.path, None)
-                last_put.pop(e.data.decode(), None)
-        return [e for e, k in zip(entries, keep) if k]
+                # rename pins prior updates of src (they move), clears dst
+                for p in (e.path, e.data.decode()):
+                    last_put.pop(p, None)
+                    ranges.pop(p, None)
+        return [e for e in kept if e is not None]
 
     # -- digest / truncate ----------------------------------------------------
     def _read_base(self) -> None:

@@ -13,6 +13,11 @@ entries costs zero per-entry re-encoding on the writer. Each
 ``seqno -> byte-offset`` index over it, and maintains an in-memory
 mirror index, so a failover target already has the dead process's cache
 state materialized (near-instant failover).
+
+Byte-range writes (``OP_WRITE``) replicate only the written range: the
+mirror keeps a per-path, tombstone-aware ``ExtentOverlay`` when the
+base value is not in the slot; reads assemble extents over the node's
+lower tiers (see ``SharedFS.read_any``).
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import bisect
 import os
 from typing import List, Optional
 
+from repro.core.extents import apply_range_write
 from repro.core.log import Entry, decode_stream
 
 
@@ -72,6 +78,8 @@ class ReplicaSlot:
             self.mirror[e.path] = e.data
         elif e.op == L.OP_DELETE:
             self.mirror[e.path] = None  # tombstone
+        elif e.op == L.OP_WRITE:
+            apply_range_write(self.mirror, e.path, e.offset, e.data)
         elif e.op == L.OP_RENAME:
             val = self.mirror.get(e.path)
             self.mirror[e.path] = None  # tombstone first: self-rename safe

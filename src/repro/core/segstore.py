@@ -9,6 +9,13 @@ spends §3.3 eliminating. This engine removes it:
 - an in-memory index maps ``path -> (segment_id, offset, length)`` so a
   get is one ``os.pread`` of exactly the value bytes — no per-path
   files, no per-path metadata IO (Haystack, OSDI'10);
+- ``patch(path, byte_offset, data)`` appends a **delta needle**
+  (op ``N_WRITE`` with the target byte offset) and links it into the
+  index as a patch chain over the base needle; a get assembles
+  latest-wins, ``get_range`` serves exact ranges with one ``pread``
+  when a single needle covers them, and compaction (or a chain growing
+  past ``max_patch_chain``) materializes the merged value — a small
+  write into a large object never rewrites the object;
 - deletes and renames are small metadata needles — the data bytes are
   never rewritten;
 - durability is **batched**: callers group ops and call ``commit()``
@@ -42,11 +49,26 @@ NEEDLE_MAGIC = 0xA551_6E0D
 N_PUT = 1
 N_DELETE = 2
 N_RENAME = 3
+N_WRITE = 4  # delta needle: data patched at byte `offset` of the value
 
-# magic, op, path_len, data_len, crc
-_NEEDLE = struct.Struct("<IBHIi")
+# magic, op, path_len, data_len, offset, crc
+_NEEDLE = struct.Struct("<IBHIQi")
+_NOFF = struct.Struct("<Q")
 
 _SEG_FMT = "seg-%08d.log"
+
+
+class _PatchChain:
+    """Index entry for a patched value: a base needle location (or None
+    for a zero-filled base) plus delta-needle locations in write order
+    (latest wins on overlap)."""
+
+    __slots__ = ("base", "patches", "length")
+
+    def __init__(self, base, length: int):
+        self.base = base  # (segment_id, value_offset, value_length) | None
+        self.patches = []  # (byte_offset, segment_id, value_offset, length)
+        self.length = length  # assembled value length
 
 
 class SegmentStore:
@@ -61,13 +83,15 @@ class SegmentStore:
     def __init__(self, root: str, capacity: int = 1 << 40, *,
                  segment_bytes: int = 8 << 20, fsync_data: bool = False,
                  compact_min_dead: int = 1 << 20,
-                 compact_dead_ratio: float = 0.5):
+                 compact_dead_ratio: float = 0.5,
+                 max_patch_chain: int = 64):
         self.root = root
         self.capacity = capacity
         self.segment_bytes = segment_bytes
         self.fsync_data = fsync_data
         self.compact_min_dead = compact_min_dead
         self.compact_dead_ratio = compact_dead_ratio
+        self.max_patch_chain = max_patch_chain
         os.makedirs(root, exist_ok=True)
         # path -> (segment_id, value_offset, value_length)
         self.index: Dict[str, Tuple[int, int, int]] = {}
@@ -115,14 +139,15 @@ class SegmentStore:
         self._active = open(self._seg_path(self._active_id), "ab")
         self._active_off = 0
 
-    def _append(self, op: int, path: str, data: bytes) -> Tuple[int, int]:
+    def _append(self, op: int, path: str, data: bytes,
+                offset: int = 0) -> Tuple[int, int]:
         """Append one needle; returns (segment_id, value_offset)."""
         if self._active_off >= self.segment_bytes:
             self._rotate()
         p = path.encode()
-        crc = zlib.crc32(p + data) & 0x7FFFFFFF
-        rec = _NEEDLE.pack(NEEDLE_MAGIC, op, len(p), len(data), crc) \
-            + p + data
+        crc = zlib.crc32(_NOFF.pack(offset) + p + data) & 0x7FFFFFFF
+        rec = _NEEDLE.pack(NEEDLE_MAGIC, op, len(p), len(data), offset,
+                           crc) + p + data
         voff = self._active_off + _NEEDLE.size + len(p)
         self._active.write(rec)
         self._active_off += len(rec)
@@ -146,7 +171,7 @@ class SegmentStore:
         length of the maximal verifiable prefix."""
         off, n = 0, len(buf)
         while off + _NEEDLE.size <= n:
-            magic, op, plen, dlen, crc = _NEEDLE.unpack_from(buf, off)
+            magic, op, plen, dlen, noff, crc = _NEEDLE.unpack_from(buf, off)
             if magic != NEEDLE_MAGIC:
                 break
             end = off + _NEEDLE.size + plen + dlen
@@ -154,7 +179,7 @@ class SegmentStore:
                 break  # torn write
             p = buf[off + _NEEDLE.size: off + _NEEDLE.size + plen]
             d = buf[off + _NEEDLE.size + plen: end]
-            if (zlib.crc32(p + d) & 0x7FFFFFFF) != crc:
+            if (zlib.crc32(_NOFF.pack(noff) + p + d) & 0x7FFFFFFF) != crc:
                 break  # corruption: cut the history here
             path = p.decode()
             if op == N_PUT:
@@ -164,6 +189,9 @@ class SegmentStore:
                 self._index_drop(path)
             elif op == N_RENAME:
                 self._index_rename(path, d.decode())
+            elif op == N_WRITE:
+                self._index_patch(path, seg_id,
+                                  off + _NEEDLE.size + plen, dlen, noff)
             self.disk_bytes += end - off
             off = end
         return off
@@ -172,21 +200,52 @@ class SegmentStore:
     def _needle_overhead(self, path: str) -> int:
         return _NEEDLE.size + len(path.encode())
 
+    def _loc_disk_bytes(self, path: str, loc) -> int:
+        """On-disk needle bytes referenced by an index entry."""
+        ovh = self._needle_overhead(path)
+        if isinstance(loc, _PatchChain):
+            n = (loc.base[2] + ovh) if loc.base is not None else 0
+            return n + sum(p[3] + ovh for p in loc.patches)
+        return loc[2] + ovh
+
     def _index_put(self, path: str, seg_id: int, voff: int,
                    vlen: int) -> None:
         old = self.index.get(path)
         if old is not None:
-            self.dead_bytes += old[2] + self._needle_overhead(path)
+            self.dead_bytes += self._loc_disk_bytes(path, old)
             self.bytes -= self.sizes.get(path, 0)
         self.index[path] = (seg_id, voff, vlen)
         self.sizes[path] = vlen
         self.bytes += vlen
         self.lru.setdefault(path, 0.0)
 
+    def _index_patch(self, path: str, seg_id: int, voff: int,
+                     vlen: int, byte_off: int) -> None:
+        """Link a delta needle into the path's patch chain."""
+        cur = self.index.get(path)
+        if isinstance(cur, _PatchChain):
+            ch = cur
+        elif cur is None:  # no base anywhere in this area: zeros base
+            ch = _PatchChain(None, 0)
+            self.index[path] = ch
+            self.lru.setdefault(path, 0.0)
+        else:
+            ch = _PatchChain(cur, cur[2])
+            self.index[path] = ch
+        old_len = ch.length
+        # no dead-byte charge per patch: the whole chain's needle bytes
+        # are charged once when it is dropped or materialized (via
+        # _loc_disk_bytes) — charging overlapped spans here too would
+        # double-count and trigger compaction earlier than configured
+        ch.patches.append((byte_off, seg_id, voff, vlen))
+        ch.length = max(old_len, byte_off + vlen)
+        self.bytes += ch.length - old_len
+        self.sizes[path] = ch.length
+
     def _index_drop(self, path: str) -> None:
         old = self.index.pop(path, None)
         if old is not None:
-            self.dead_bytes += old[2] + self._needle_overhead(path)
+            self.dead_bytes += self._loc_disk_bytes(path, old)
             self.bytes -= self.sizes.pop(path, 0)
             self.lru.pop(path, None)
 
@@ -197,7 +256,10 @@ class SegmentStore:
         if dst in self.index:
             self._index_drop(dst)
         self.index[dst] = loc
-        self.sizes[dst] = self.sizes.pop(src, loc[2])
+        sz = self.sizes.pop(src, None)
+        if sz is None:
+            sz = loc.length if isinstance(loc, _PatchChain) else loc[2]
+        self.sizes[dst] = sz
         self.lru[dst] = self.lru.pop(src, 0.0)
 
     # -- data path ------------------------------------------------------------
@@ -207,15 +269,79 @@ class SegmentStore:
         self.lru[path] = time.monotonic()
         self._maybe_compact()
 
+    def patch(self, path: str, offset: int, data: bytes) -> None:
+        """Byte-range write: one delta-needle append, never a rewrite of
+        the base value. Chains longer than ``max_patch_chain`` are
+        materialized into a single fresh needle to bound read fan-in."""
+        seg_id, voff = self._append(N_WRITE, path, data, offset)
+        self._index_patch(path, seg_id, voff, len(data), offset)
+        self.lru[path] = time.monotonic()
+        ch = self.index.get(path)
+        if isinstance(ch, _PatchChain) \
+                and len(ch.patches) > self.max_patch_chain:
+            merged = self._assemble(ch)
+            self.put(path, merged)  # old chain becomes dead bytes
+            return
+        self._maybe_compact()
+
     def get(self, path: str) -> Optional[bytes]:
         loc = self.index.get(path)
         if loc is None:
             return None
         self.lru[path] = time.monotonic()
+        if isinstance(loc, _PatchChain):
+            return self._assemble(loc)
         return self._read_loc(loc)
+
+    def get_range(self, path: str, offset: int,
+                  length: int) -> Optional[bytes]:
+        """Exact-range read: one ``os.pread`` of just the requested
+        bytes when a single needle covers the range (clamped at EOF)."""
+        loc = self.index.get(path)
+        if loc is None:
+            return None
+        self.lru[path] = time.monotonic()
+        if not isinstance(loc, _PatchChain):
+            seg_id, voff, vlen = loc
+            if offset >= vlen:
+                return b""
+            return self._read_at(seg_id, voff + offset,
+                                 min(length, vlen - offset))
+        overlapped = False
+        for boff, seg_id, voff, vlen in reversed(loc.patches):
+            if boff <= offset and offset + length <= boff + vlen:
+                # latest patch fully covering the range: serve it direct
+                return self._read_at(seg_id, voff + (offset - boff), length)
+            if boff < offset + length and offset < boff + vlen:
+                overlapped = True  # a newer patch partially overlaps
+                break
+        if not overlapped:
+            base = loc.base
+            if base is not None and offset + length <= base[2]:
+                # range lies wholly in the base needle: one pread
+                return self._read_at(base[0], base[1] + offset, length)
+            if base is None or offset >= base[2]:
+                # hole between/past patches: zeros, clamped to length
+                end = min(offset + length, loc.length)
+                return b"\x00" * max(0, end - offset)
+        full = self._assemble(loc)
+        return full[offset:offset + length]
+
+    def _assemble(self, ch: _PatchChain) -> bytes:
+        """Latest-wins assembly of a patch chain (zeros-filled base)."""
+        buf = bytearray(ch.length)
+        if ch.base is not None:
+            base = self._read_loc(ch.base)
+            buf[:len(base)] = base
+        for boff, seg_id, voff, vlen in ch.patches:
+            buf[boff:boff + vlen] = self._read_at(seg_id, voff, vlen)
+        return bytes(buf)
 
     def _read_loc(self, loc: Tuple[int, int, int]) -> bytes:
         seg_id, voff, vlen = loc
+        return self._read_at(seg_id, voff, vlen)
+
+    def _read_at(self, seg_id: int, off: int, size: int) -> bytes:
         if seg_id == self._active_id and self._dirty:
             self._active.flush()
             self._dirty = False
@@ -223,7 +349,7 @@ class SegmentStore:
         if fd is None:
             fd = os.open(self._seg_path(seg_id), os.O_RDONLY)
             self._read_fds[seg_id] = fd
-        return os.pread(fd, vlen, voff)
+        return os.pread(fd, size, off)
 
     def delete(self, path: str) -> None:
         if path not in self.index:
@@ -271,8 +397,21 @@ class SegmentStore:
                 * max(1, self.disk_bytes)):
             self.compact()
 
+    @staticmethod
+    def _loc_key(loc) -> Tuple[int, int]:
+        """(segment, offset) sort key; chains sort by their base (or
+        first patch) so compaction still reads old segments in order."""
+        if isinstance(loc, _PatchChain):
+            if loc.base is not None:
+                return loc.base[0], loc.base[1]
+            return loc.patches[0][1], loc.patches[0][2]
+        return loc[0], loc[1]
+
     def compact(self) -> None:
         """Copy live needles into fresh segments, drop the old ones.
+        Patch chains are **materialized**: the merged value is written
+        as one plain needle, so reads after compaction are single-pread
+        again.
 
         Crash-safe without a manifest: new segments get strictly higher
         ids and are flushed before the old files are unlinked, and
@@ -286,11 +425,14 @@ class SegmentStore:
         self._active = open(self._seg_path(self._active_id), "ab")
         self._active_off = 0
         self.disk_bytes = 0
-        live = sorted(self.index.items(), key=lambda kv: kv[1])
+        live = sorted(self.index.items(),
+                      key=lambda kv: self._loc_key(kv[1]))
         for path, loc in live:  # old-segment order: sequential reads
-            data = self._read_loc(loc)
+            data = self._assemble(loc) if isinstance(loc, _PatchChain) \
+                else self._read_loc(loc)
             seg_id, voff = self._append(N_PUT, path, data)
             self.index[path] = (seg_id, voff, len(data))
+            self.sizes[path] = len(data)
         self._active.flush()
         if self.fsync_data:
             os.fsync(self._active.fileno())

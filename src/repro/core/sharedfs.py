@@ -13,10 +13,11 @@ single ``commit()`` instead of a per-op manifest flush.
 from __future__ import annotations
 
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import log as L
 from repro.core.cluster import ClusterManager
+from repro.core.extents import ExtentOverlay
 from repro.core.leases import LeaseManager, READ, WRITE
 from repro.core.replication import ReplicaSlot
 from repro.core.segstore import SegmentStore
@@ -78,18 +79,27 @@ class SharedFS:
     def ensure_slot(self, proc_id: str) -> None:
         self.slot_for(proc_id)
 
+    def in_slot(self, path: str) -> bool:
+        """Whether any replica slot's mirror holds fresher (undigested)
+        state for the path — the tier `read_any` consults first."""
+        return any(path in s.mirror for s in self.slots.values())
+
     def chain_continue(self, proc_id: str, data: bytes,
                        rest: List[str]) -> int:
         """RPC: continue chain replication; ack = last seqno seen."""
         slot = self.slot_for(proc_id)
         incoming = L.decode_stream(data) if data else []
-        if incoming and (not slot.entries
-                         or slot.entries[-1].seqno < incoming[-1].seqno):
+        if incoming:
             # One-sided write may already have landed (writer wrote to us
-            # directly as chain head). Idempotent append if not.
-            have = {e.seqno for e in slot.entries}
+            # directly as chain head). Idempotent append: only entries
+            # NEWER than the slot's tail — an older seqno the slot lacks
+            # was coalesced out of a batch it already acked (the
+            # coalesced stream is replay-equivalent), and appending it
+            # now would replay stale data over newer and unsort the
+            # slot's seqno index.
+            last = slot.entries[-1].seqno if slot.entries else 0
             for e in incoming:
-                if e.seqno not in have:
+                if e.seqno > last:
                     slot.write(None, e.encode())
         if rest:
             head, tail = rest[0], rest[1:]
@@ -132,6 +142,23 @@ class SharedFS:
     def _apply_entry(self, e: L.Entry) -> None:
         if e.op == L.OP_PUT:
             self.hot.put(e.path, e.data)
+        elif e.op == L.OP_WRITE:
+            # patch in place in the hot area (promote a cold base first:
+            # the patched object is hot by definition of being written)
+            if not self.hot.contains(e.path) and self.cold.contains(e.path):
+                data = self.cold.get(e.path)
+                self.cold.delete(e.path)
+                self.hot.put(e.path, data)
+            if not self.hot.contains(e.path):
+                # no local base (e.g. dropped by epoch invalidation, or
+                # a late-joining replica): fetch it from a peer before
+                # patching — patching a fabricated zeros base would
+                # permanently corrupt the object on this node. A peer
+                # tombstone (found, None) legitimately means zeros.
+                base = self._fetch_base(e.path)
+                if base is not None:
+                    self.hot.put(e.path, base)
+            self.hot.patch(e.path, e.offset, e.data)
         elif e.op == L.OP_DELETE:
             self.hot.delete(e.path)
             self.cold.delete(e.path)
@@ -145,6 +172,22 @@ class SharedFS:
                 self.hot.put(dst, data)
         self.cluster.mark_dirty(e.path if e.op != L.OP_RENAME
                                 else e.data.decode())
+
+    def _fetch_base(self, path: str) -> Optional[bytes]:
+        """Base value for a range write from the path's replica peers
+        (freshest view: their slots are consulted first by read_any)."""
+        peers = self.cluster.chain_for(path) + \
+            self.cluster.reserves.get("/", [])
+        for nid in peers:
+            if nid == self.node_id:
+                continue
+            try:
+                found, v = self.transport.rpc(nid, "read_remote", path)
+            except Exception:
+                continue
+            if found:
+                return v  # may be None: peer tombstone -> zeros base
+        return None
 
     def _evict_if_needed(self) -> None:
         if self.hot.bytes <= self.hot.capacity:
@@ -170,20 +213,54 @@ class SharedFS:
         """L2 read (RPC-able): hot area only."""
         return self.hot.get(path)
 
-    def read_any(self, path: str) -> Optional[bytes]:
-        """Undigested replica slots first (freshest), then hot, then cold.
-        Slot tombstones (None) are authoritative misses."""
+    def read_any(self, path: str,
+                 fetch_base: bool = True) -> Tuple[bool, Optional[bytes]]:
+        """Undigested replica slots first (freshest), then hot, then
+        cold. Returns ``(found, value)`` so a slot **tombstone** —
+        ``(True, None)`` — is distinguishable from a plain miss
+        ``(False, None)``: callers must not fall through to other
+        replicas or cold storage on a tombstone (deleted data would
+        resurrect). Slot extent overlays are assembled over this node's
+        lower tiers (zeros base after a tombstone); when the local base
+        copy is gone (epoch invalidation, late join) it is fetched from
+        peers rather than fabricated as zeros. ``fetch_base=False`` is
+        the remote-serving mode (see ``read_remote``): it reports a
+        miss instead of fetching, which both breaks the RPC cycle two
+        base-less nodes would otherwise enter and lets the remote
+        caller continue its own tier walk."""
         for slot in self.slots.values():
             if path in slot.mirror:
-                return slot.mirror[path]  # may be a tombstone (None)
+                v = slot.mirror[path]
+                if isinstance(v, ExtentOverlay):
+                    base = b""
+                    if not v.from_zero:
+                        # explicit None checks: an empty-bytes hot value
+                        # is a real base and must not fall through to a
+                        # stale cold copy
+                        base = self.hot.get(path)
+                        if base is None:
+                            base = self.cold.get(path)
+                        if base is None:
+                            if not fetch_base:
+                                return False, None
+                            base = self._fetch_base(path)
+                        if base is None:
+                            base = b""
+                    return True, v.apply_to(base)
+                if isinstance(v, bytearray):  # in-place-patched mirror
+                    return True, bytes(v)
+                return True, v  # full value, or tombstone (None)
         v = self.hot.get(path)
         if v is not None:
-            return v
-        return self.cold.get(path)
+            return True, v
+        v = self.cold.get(path)
+        if v is not None:
+            return True, v
+        return False, None
 
-    def read_remote(self, path: str) -> Optional[bytes]:
+    def read_remote(self, path: str) -> Tuple[bool, Optional[bytes]]:
         self.stats["remote_reads"] += 1
-        return self.read_any(path)
+        return self.read_any(path, fetch_base=False)
 
     # -- leases -------------------------------------------------------------------
     def lease_acquire(self, holder: str, path: str, mode: str,

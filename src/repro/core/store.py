@@ -5,6 +5,11 @@ analogue): writes append to the private update log in "NVM"; reads hit
 the log hashtable, then the process DRAM cache, then the node's SharedFS
 hot area, then remote replicas (reserve first), then cold storage.
 
+``write(path, data, offset)`` is the byte-range write: only the range
+is logged/replicated/digested, and reads assemble latest-wins extents
+from the log overlay over whichever tier holds the base value.
+``put`` remains the whole-value degenerate case.
+
 Crash-consistency modes (paper §3):
   pessimistic — fsync() chain-replicates synchronously; acked writes
                 survive any single chain-node loss.
@@ -19,6 +24,7 @@ from collections import OrderedDict
 from typing import List, Optional
 
 from repro.core import log as L
+from repro.core.extents import ExtentOverlay
 from repro.core.leases import READ, WRITE
 from repro.core.log import UpdateLog
 from repro.core.replication import ChainClient
@@ -87,9 +93,9 @@ class LibState:
             sharedfs.transport.rpc(n, "ensure_slot", proc_id)
         sharedfs.local_procs[proc_id] = self
         self.digest_threshold = 0.75
-        self.stats = {"puts": 0, "gets": 0, "l1_hits": 0, "l2_hits": 0,
-                      "remote_hits": 0, "cold_hits": 0, "digests": 0,
-                      "coalesced_out": 0}
+        self.stats = {"puts": 0, "range_writes": 0, "gets": 0,
+                      "l1_hits": 0, "l2_hits": 0, "remote_hits": 0,
+                      "digests": 0, "coalesced_out": 0}
 
     # -- leases ---------------------------------------------------------------
     def _lease(self, path: str, mode: str) -> None:
@@ -109,6 +115,17 @@ class LibState:
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
             self.digest()
 
+    def write(self, path: str, data: bytes, offset: int = 0) -> None:
+        """Byte-range write (paper §3: IO-operation granularity). Logs,
+        replicates, and digests only ``len(data)`` bytes, wherever they
+        land inside the object; gaps past the old end read as zeros."""
+        self._lease(path, WRITE)
+        self.log.append(L.OP_WRITE, path, data, offset)
+        self.stats["range_writes"] += 1
+        self.dram.invalidate(path)
+        if self.log.bytes >= self.digest_threshold * self.log.capacity:
+            self.digest()
+
     def delete(self, path: str) -> None:
         self._lease(path, WRITE)
         self.log.append(L.OP_DELETE, path)
@@ -117,6 +134,16 @@ class LibState:
     def rename(self, src: str, dst: str) -> None:
         self._lease(src, WRITE)
         self._lease(dst, WRITE)
+        v = self.log.index.get(src, self._MISS)
+        if isinstance(v, ExtentOverlay) or v is self._MISS:
+            # materialize src into the log first: a partial overlay (or a
+            # value living only below the log) would otherwise detach
+            # from its base when the name moves — the replicated stream
+            # then carries PUT(src) + RENAME, and read-your-writes holds
+            # for renames of digested data too.
+            full = self.get(src)
+            if full is not None:
+                self.log.append(L.OP_PUT, src, full)
         self.log.append(L.OP_RENAME, src, dst.encode())
         self.dram.invalidate(src)
         self.dram.invalidate(dst)
@@ -145,45 +172,91 @@ class LibState:
             self.chain.replicate(pending, self.log.encoded_since(since))
 
     # -- read path ------------------------------------------------------------
+    _MISS = object()
+
     def get(self, path: str) -> Optional[bytes]:
         self._lease(path, READ)
         self.stats["gets"] += 1
-        _miss = object()
-        v = self.log.index.get(path, _miss)  # L1a: log hashtable
-        if v is not _miss:
+        v = self.log.index.get(path, self._MISS)  # L1a: log hashtable
+        if v is not self._MISS:
             self.stats["l1_hits"] += 1
-            return v  # may be a tombstone (None): authoritative
+            if isinstance(v, ExtentOverlay):
+                # extent assembly: undigested ranges over the base from
+                # the tiers below (zeros base after a local tombstone).
+                # The base is NOT dram-cached: it is stale the moment
+                # the overlay digests.
+                base = b"" if v.from_zero else (
+                    self._read_below(path, fill_cache=False) or b"")
+                return v.apply_to(base)
+            if isinstance(v, bytearray):  # in-place-patched: copy out
+                return bytes(v)
+            return v  # full value, or a tombstone (None): authoritative
         v = self.dram.get(path)  # L1b: process DRAM read cache
         if v is not None:
             self.stats["l1_hits"] += 1
             return v
-        v = self.sfs.read_any(path)  # L2: node-local SharedFS
-        if v is not None:
-            self.stats["l2_hits"] += 1
-            self.dram.put(path, v)
+        return self._read_below(path)
+
+    def _read_below(self, path: str,
+                    fill_cache: bool = True) -> Optional[bytes]:
+        """L2..L4: node-local SharedFS (slots, hot, cold), then remote
+        replica NVM. A *found* answer — including a tombstone — is
+        authoritative: deleted data must never resurrect from a colder
+        tier (see ``SharedFS.read_any``)."""
+        found, v = self.sfs.read_any(path)  # L2: node-local SharedFS
+        if found:
+            if v is not None:
+                self.stats["l2_hits"] += 1
+                if fill_cache:
+                    self.dram.put(path, v)
             return v
         for nid in self.reserves + self.chain.chain:  # L3: remote NVM
             try:
-                v = self.transport.rpc(nid, "read_remote", path)
+                found, v = self.transport.rpc(nid, "read_remote", path)
             except Exception:
                 continue
-            if v is not None:
-                self.stats["remote_hits"] += 1
-                self.dram.put(path, v)
+            if found:
+                if v is not None:
+                    self.stats["remote_hits"] += 1
+                    if fill_cache:
+                        self.dram.put(path, v)
                 return v
-        v = self.sfs.cold.get(path)  # L4: cold storage
-        if v is not None:
-            self.stats["cold_hits"] += 1
-            self.dram.put(path, v)
-        return v
+        return None
+
+    def get_range(self, path: str, offset: int,
+                  length: int) -> Optional[bytes]:
+        """Exact-range read. When the value lives (only) in the hot
+        area this is one ``os.pread`` of just the requested bytes; an
+        undigested overlay that fully covers the range is served from
+        the log without touching the base at all."""
+        self._lease(path, READ)
+        self.stats["gets"] += 1
+        v = self.log.index.get(path, self._MISS)
+        if isinstance(v, ExtentOverlay):
+            r = v.read_range(offset, length)
+            if r is not None:
+                self.stats["l1_hits"] += 1
+                return r
+        elif v is self._MISS:
+            v = self.dram.get(path)  # counts hit/miss, bumps LRU
+            if v is not None:
+                self.stats["l1_hits"] += 1
+                return v[offset:offset + length]
+            if not self.sfs.in_slot(path) and self.sfs.hot.contains(path):
+                self.stats["l2_hits"] += 1
+                return self.sfs.hot.get_range(path, offset, length)
+        self.stats["gets"] -= 1  # the fallback get() recounts
+        full = self.get(path)
+        return None if full is None else full[offset:offset + length]
 
     # -- digest (replicate + apply + truncate) -------------------------------------
     def digest(self) -> None:
         self.log.persist()
         self._replicate(coalesce=(self.mode == "optimistic"))
         upto = self.log.last_seqno
-        entries = self.log.entries_since(0)
-        self.sfs.digest_entries([e for e in entries if e.seqno <= upto])
+        # every undigested entry has seqno <= last_seqno by construction;
+        # apply the already-materialized list directly
+        self.sfs.digest_entries(self.log.entries_since(0))
         for nid in self.chain.chain:
             self.transport.rpc(nid, "digest_slot", self.proc_id, upto)
         self.log.truncate_through(upto)
@@ -216,9 +289,23 @@ def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
     log_path = f"{sharedfs.root}/nvm/proc/{proc_id}.log"
     tmp = UpdateLog(log_path, fsync_data=False)
     entries = tmp.entries_since(0)
+    upto = tmp.last_seqno
+    enc = tmp.encoded_since(0)
+    # ship the surviving suffix to the chain BEFORE digesting: the dead
+    # process may not have fsync'd its tail, and digesting (e.g.) an
+    # unreplicated delete only locally would leave the replicas' hot
+    # areas holding the stale value — which reads would then resurrect.
+    # ``chain_continue`` appends idempotently (dedups by seqno).
+    for nid in chain:
+        if nid != sharedfs.node_id:
+            try:
+                sharedfs.transport.rpc(nid, "ensure_slot", proc_id)
+                sharedfs.transport.rpc(nid, "chain_continue", proc_id,
+                                       enc, [])
+            except Exception:
+                pass  # dead replica: chain repair handles it
     if entries:
         sharedfs.digest_entries(entries)
-    upto = tmp.last_seqno
     tmp.truncate_through(upto)
     tmp.close()
     # keep chain replicas in lockstep (their slots digest the same prefix)

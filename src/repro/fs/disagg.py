@@ -18,6 +18,7 @@ import time
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
+from repro.core.extents import splice
 from repro.core.segstore import SegmentStore
 from repro.core.transport import Transport
 
@@ -112,6 +113,13 @@ class DisaggClient:
         self.stats["puts"] += 1
         self._cache_put(path, data)
         self.dirty[path] = data
+
+    def write(self, path: str, data: bytes, offset: int = 0) -> None:
+        """Byte-range write: kernel-buffer-cache read-modify-write. The
+        client must materialize the whole object (fetching it on a cache
+        miss) and fsync pushes whole 4KB-rounded blocks to every replica
+        — the block amplification Assise's extent path avoids."""
+        self.put(path, splice(self.get(path) or b"", offset, data))
 
     def get(self, path: str) -> Optional[bytes]:
         self.stats["gets"] += 1

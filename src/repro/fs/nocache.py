@@ -5,6 +5,7 @@ from __future__ import annotations
 import os
 from typing import Optional
 
+from repro.core.extents import splice
 from repro.core.segstore import SegmentStore
 from repro.core.transport import Transport
 
@@ -47,6 +48,12 @@ class NoCacheClient:
     def put(self, path: str, data: bytes) -> None:
         self.stats["puts"] += 1
         self.c.transport.rpc(self._server_for(path), "put", path, data)
+
+    def write(self, path: str, data: bytes, offset: int = 0) -> None:
+        """Byte-range write without a client cache: fetch the whole
+        object over the wire, patch, push the whole object back — every
+        small write pays two full-object transfers (the Octopus rows)."""
+        self.put(path, splice(self.get(path) or b"", offset, data))
 
     def get(self, path: str) -> Optional[bytes]:
         self.stats["gets"] += 1

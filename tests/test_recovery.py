@@ -40,7 +40,7 @@ def test_epoch_invalidation_on_rejoin(tmp_cluster):
     ls2.digest()
     sfs0 = tmp_cluster.restart_node("node0")
     # node0's stale copy of /e/x was invalidated via the epoch bitmap
-    v = sfs0.read_any("/e/x")
+    _, v = sfs0.read_any("/e/x")
     assert v in (None, b"v2")
     assert v != b"v1"
 
