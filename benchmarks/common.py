@@ -15,9 +15,24 @@ import time
 ROWS = []
 
 
-def row(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+def row(name: str, us_per_call: float, derived: str = "", *,
+        p50: float = None, p99: float = None, p999: float = None):
+    """Record one benchmark row. Percentile columns are optional: tail-
+    latency rows (fig13.*) carry p50/p99/p999 alongside the mean so the
+    perf-trajectory guard (benchmarks/compare.py) can diff tails too."""
+    r = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    tail = ""
+    if p50 is not None:
+        r.update(p50=p50, p99=p99, p999=p999)
+        tail = f",p50={p50:.2f},p99={p99:.2f},p999={p999:.2f}"
+    ROWS.append(r)
+    print(f"{name},{us_per_call:.2f},{derived}{tail}", flush=True)
+
+
+def tail_stats(lat_us):
+    """(mean, p50, p99, p999) of a per-op latency sample in us."""
+    return (statistics.fmean(lat_us), pct(lat_us, 50), pct(lat_us, 99),
+            pct(lat_us, 99.9))
 
 
 def time_us(fn, n: int, warmup: int = 2):

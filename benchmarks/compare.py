@@ -23,7 +23,7 @@ import sys
 def load_rows(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+    return {r["name"]: r for r in payload["rows"]}
 
 
 def latest_two(root: str = "."):
@@ -43,10 +43,13 @@ def main() -> int:
     ap.add_argument("--latest-two", action="store_true",
                     help="compare the two highest-numbered BENCH_*.json "
                          "in the repo root")
-    ap.add_argument("--prefixes", default="fig10.,table1.,fig12.",
+    ap.add_argument("--prefixes", default="fig10.,table1.,fig12.,fig13.",
                     help="comma-separated row-name prefixes to guard")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/old us_per_call exceeds this")
+    ap.add_argument("--tail-max-ratio", type=float, default=4.0,
+                    help="fail when new/old p99 or p999 exceeds this "
+                         "(tail percentiles are noisier than means)")
     args = ap.parse_args()
 
     if args.latest_two:
@@ -64,28 +67,39 @@ def main() -> int:
     prefixes = tuple(p for p in args.prefixes.split(",") if p)
 
     print(f"comparing {old_path} -> {new_path} "
-          f"(prefixes={','.join(prefixes)} max-ratio={args.max_ratio}x)")
+          f"(prefixes={','.join(prefixes)} max-ratio={args.max_ratio}x "
+          f"tail-max-ratio={args.tail_max_ratio}x)")
+    metrics = (("us_per_call", args.max_ratio), ("p99", args.tail_max_ratio),
+               ("p999", args.tail_max_ratio))
     regressed, compared, missing = [], 0, 0
     for name in sorted(set(old) | set(new)):
         if not name.startswith(prefixes):
             continue
-        if name not in old or old[name] <= 0:
-            print(f"  NEW     {name}: {new[name]:.2f}us")
+        if name not in old or float(old[name]["us_per_call"]) <= 0:
+            print(f"  NEW     {name}: "
+                  f"{float(new[name]['us_per_call']):.2f}us")
             continue
         if name not in new:
             # guard coverage narrowed (bench removed/renamed): say so
             # loudly even though it is not a timing regression
-            print(f"  MISSING {name}: was {old[name]:.2f}us, "
+            print(f"  MISSING {name}: was "
+                  f"{float(old[name]['us_per_call']):.2f}us, "
                   f"absent from {new_path}")
             missing += 1
             continue
-        ratio = new[name] / old[name]
         compared += 1
-        flag = " REGRESSION" if ratio > args.max_ratio else ""
-        print(f"  {name}: {old[name]:.2f} -> {new[name]:.2f}us "
-              f"({ratio:.2f}x){flag}")
-        if flag:
-            regressed.append(name)
+        for metric, max_ratio in metrics:
+            if metric not in old[name] or metric not in new[name]:
+                continue  # old dumps have no percentile columns
+            ov, nv = float(old[name][metric]), float(new[name][metric])
+            if ov <= 0:
+                continue
+            ratio = nv / ov
+            flag = " REGRESSION" if ratio > max_ratio else ""
+            print(f"  {name}[{metric}]: {ov:.2f} -> {nv:.2f}us "
+                  f"({ratio:.2f}x){flag}")
+            if flag:
+                regressed.append(f"{name}[{metric}]")
     print(f"compare: {compared} rows compared, {missing} missing, "
           f"{len(regressed)} regressed")
     if regressed:

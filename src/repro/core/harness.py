@@ -94,13 +94,17 @@ class AssiseCluster:
                 self.cm.heartbeat(nid)
 
     def kill_node(self, node_id: str) -> None:
-        """Node dies (power loss): DRAM gone, NVM + SSD files survive."""
+        """Node dies (power loss): DRAM gone, NVM + SSD files survive.
+        The node's digest worker dies with it — queued sealed-region
+        jobs are abandoned, not run (a dead node must not keep
+        digesting into the cluster)."""
         self.dead_nodes.add(node_id)
         self.transport.set_down(node_id)
         for pid, ls in list(self.procs.items()):
             if ls.sfs.node_id == node_id:
                 ls.dram.clear()
                 self.procs.pop(pid)
+        self.sharedfs[node_id].shutdown(abandon=True)
 
     def detect_failures(self, timeout: float = 1.0) -> List[str]:
         return self.cm.check_failures(timeout)
@@ -150,6 +154,8 @@ class AssiseCluster:
                 ls.close()
             except Exception:
                 pass
+        for nid, sfs in self.sharedfs.items():
+            sfs.shutdown(abandon=(nid in self.dead_nodes))
 
     def destroy(self) -> None:
         self.close()

@@ -51,26 +51,62 @@ class Lease:
 
 @dataclass
 class LeaseTable:
-    """Grant table with conflict detection + expiry."""
+    """Grant table with conflict detection + expiry.
+
+    Indexed by holder and by lease path so the hot-path queries stop
+    scanning every grant: ``find`` walks only the holder's own leases
+    (typically one or two), and ``conflicting`` probes the exact path +
+    its ancestors in the path index, then prefix-scans only the
+    *distinct lease paths* for descendants.
+    """
 
     leases: Dict[int, Lease] = field(default_factory=dict)
+    by_holder: Dict[str, Dict[int, Lease]] = field(default_factory=dict)
+    by_path: Dict[str, Dict[int, Lease]] = field(default_factory=dict)
+
+    def _index(self, l: Lease) -> None:
+        self.by_holder.setdefault(l.holder, {})[l.id] = l
+        self.by_path.setdefault(l.path, {})[l.id] = l
+
+    def _unindex(self, l: Lease) -> None:
+        for m, key in ((self.by_holder, l.holder), (self.by_path, l.path)):
+            d = m.get(key)
+            if d is not None:
+                d.pop(l.id, None)
+                if not d:
+                    del m[key]
+
+    def _drop(self, l: Lease) -> None:
+        self.leases.pop(l.id, None)
+        self._unindex(l)
 
     def expire(self, now: float) -> List[Lease]:
         dead = [l for l in self.leases.values() if not l.valid(now)]
         for l in dead:
-            del self.leases[l.id]
+            self._drop(l)
         return dead
 
     def conflicting(self, path: str, mode: str, now: float,
                     exclude_holder: Optional[str] = None) -> List[Lease]:
         self.expire(now)
-        return [l for l in self.leases.values()
+        cands: Dict[int, Lease] = {}
+        probe = path  # leases whose path covers ours: exact + ancestors
+        while True:
+            cands.update(self.by_path.get(probe, {}))
+            if probe == "/":
+                break
+            probe = probe.rsplit("/", 1)[0] or "/"
+        pre = path.rstrip("/") + "/"  # leases we would cover: descendants
+        for p, d in self.by_path.items():
+            if p.startswith(pre):
+                cands.update(d)
+        return [l for l in cands.values()
                 if l.holder != exclude_holder
                 and conflicts(l.path, l.mode, path, mode)]
 
     def find(self, holder: str, path: str, mode: str, now: float):
-        for l in self.leases.values():
-            if (l.holder == holder and l.valid(now) and covers(l.path, path)
+        for l in self.by_holder.get(holder, {}).values():
+            if (l.valid(now) and covers(l.path, path)
                     and (l.mode == WRITE or mode == READ)):
                 return l
         return None
@@ -79,16 +115,19 @@ class LeaseTable:
               ttl: float = LEASE_TTL) -> Lease:
         l = Lease(next(_ids), path, mode, holder, now + ttl)
         self.leases[l.id] = l
+        self._index(l)
         return l
 
     def release(self, lease_id: int) -> None:
-        self.leases.pop(lease_id, None)
+        l = self.leases.get(lease_id)
+        if l is not None:
+            self._drop(l)
 
     def release_holder(self, holder: str) -> int:
-        ids = [i for i, l in self.leases.items() if l.holder == holder]
-        for i in ids:
-            del self.leases[i]
-        return len(ids)
+        dead = list(self.by_holder.get(holder, {}).values())
+        for l in dead:
+            self._drop(l)
+        return len(dead)
 
 
 class LeaseManager:

@@ -23,27 +23,60 @@ from __future__ import annotations
 
 import bisect
 import os
+import threading
 from typing import List, Optional
 
+from repro.core.log import _WRITE_BUF  # shared append-buffer size
 from repro.core.extents import apply_range_write
-from repro.core.log import Entry, decode_stream
+from repro.core.log import (Entry, affected_paths, decode_stream,
+                            renames_touch)
+
+
+def _apply_to_table(table: dict, e: Entry) -> None:
+    """Entry application into a plain ``path -> value`` dict — the
+    scratch-table form of ``ReplicaSlot._apply`` used by truncation to
+    precompute survivor state before touching the live mirror."""
+    from repro.core import log as L
+    if e.op == L.OP_PUT:
+        table[e.path] = e.data
+    elif e.op == L.OP_DELETE:
+        table[e.path] = None  # tombstone
+    elif e.op == L.OP_WRITE:
+        apply_range_write(table, e.path, e.offset, e.data)
+    elif e.op == L.OP_RENAME:
+        val = table.get(e.path)
+        table[e.path] = None  # tombstone first: self-rename safe
+        if val is not None:
+            table[e.data.decode()] = val
 
 
 class ReplicaSlot:
-    """File-backed replica region for one writer process."""
+    """File-backed replica region for one writer process.
 
-    def __init__(self, path: str, fsync_data: bool = False):
+    ``index``, when given, is the owning SharedFS's shared
+    ``path -> slot`` reverse index: every mirror insert/remove updates
+    it, so ``read_any``/``in_slot`` cost one dict hit instead of a scan
+    over every slot's mirror.
+    """
+
+    def __init__(self, path: str, fsync_data: bool = False, *,
+                 index: Optional[dict] = None):
         self.path = path
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        self._f = open(path, "ab+")
+        self._f = open(path, "ab+", buffering=_WRITE_BUF)
         self.fsync_data = fsync_data
         self._buf = bytearray()
         self.entries: List[Entry] = []
         self._offsets: List[int] = []  # entry i -> offset into _buf
         self._seqnos: List[int] = []   # entry i -> seqno (bisect key)
         self.mirror = {}  # path -> bytes (latest, undigested)
+        self._index = index if index is not None else {}
         self.acked_seqno = 0
         self.digested_seqno = 0
+        # serializes appends (chain writes) against truncation (digest
+        # fan-out runs on the writer's background worker): both reshape
+        # the entry/offset lists and the slot file
+        self._lock = threading.RLock()
         self._recover()
 
     def _recover(self) -> None:
@@ -59,7 +92,7 @@ class ReplicaSlot:
             self._f.close()
             with open(self.path, "rb+") as f:
                 f.truncate(valid)
-            self._f = open(self.path, "ab+")
+            self._f = open(self.path, "ab+", buffering=_WRITE_BUF)
 
     def _ingest(self, new: List[Entry], start_off: int) -> None:
         off = start_off
@@ -72,30 +105,41 @@ class ReplicaSlot:
         if new:
             self.acked_seqno = new[-1].seqno
 
+    def _mirror_set(self, path: str, val) -> None:
+        self.mirror[path] = val
+        self._index[path] = self
+
+    def _mirror_del(self, path: str) -> None:
+        self.mirror.pop(path, None)
+        if self._index.get(path) is self:
+            del self._index[path]
+
     def _apply(self, e: Entry) -> None:
         from repro.core import log as L
         if e.op == L.OP_PUT:
-            self.mirror[e.path] = e.data
+            self._mirror_set(e.path, e.data)
         elif e.op == L.OP_DELETE:
-            self.mirror[e.path] = None  # tombstone
+            self._mirror_set(e.path, None)  # tombstone
         elif e.op == L.OP_WRITE:
             apply_range_write(self.mirror, e.path, e.offset, e.data)
+            self._index[e.path] = self
         elif e.op == L.OP_RENAME:
             val = self.mirror.get(e.path)
-            self.mirror[e.path] = None  # tombstone first: self-rename safe
+            self._mirror_set(e.path, None)  # tombstone first: self-rename safe
             if val is not None:
-                self.mirror[e.data.decode()] = val
+                self._mirror_set(e.data.decode(), val)
 
     # transport sink interface -------------------------------------------------
     def write(self, offset: Optional[int], data: bytes) -> None:
         """One-sided append (RDMA WRITE). Persist + decode new entries."""
-        self._f.write(data)
-        self._f.flush()
-        if self.fsync_data:
-            os.fsync(self._f.fileno())
-        start = len(self._buf)
-        self._buf += data
-        self._ingest(decode_stream(data), start)
+        with self._lock:
+            self._f.write(data)
+            self._f.flush()
+            if self.fsync_data:
+                os.fsync(self._f.fileno())
+            start = len(self._buf)
+            self._buf += data
+            self._ingest(decode_stream(data), start)
 
     def read(self, offset: int, size: int) -> bytes:
         return bytes(self._buf[offset: offset + size])
@@ -108,9 +152,17 @@ class ReplicaSlot:
 
     def truncate_through(self, seqno: int) -> None:
         """Drop digested entries by rotating the undigested suffix into
-        a fresh slot file (single slice write + atomic ``os.replace``)."""
+        a fresh slot file (single slice write + atomic ``os.replace``).
+        The mirror is maintained incrementally: only paths the dropped
+        entries touched are recomputed (restricted replay of the
+        surviving suffix), not the whole mirror."""
+        with self._lock:
+            self._truncate_locked(seqno)
+
+    def _truncate_locked(self, seqno: int) -> None:
         i = self._idx_after(seqno)
         cut = self._offsets[i] if i < len(self.entries) else len(self._buf)
+        dropped = self.entries[:i]
         self.entries = self.entries[i:]
         self._offsets = [o - cut for o in self._offsets[i:]]
         self._seqnos = self._seqnos[i:]
@@ -122,10 +174,34 @@ class ReplicaSlot:
         with open(nxt, "wb") as f:
             f.write(self._buf)
         os.replace(nxt, self.path)  # segment rotation
-        self._f = open(self.path, "ab+")
-        self.mirror = {}
+        self._f = open(self.path, "ab+", buffering=_WRITE_BUF)
+        # Mirror maintenance is gap-free for concurrent readers
+        # (read_any runs lockless on another thread): the survivors'
+        # state is computed into a scratch table first, then applied as
+        # per-path set/delete — a reader sees either the pre-truncate
+        # value or the post-truncate one, never a transient miss that
+        # would fall through to the hot area's older prefix.
+        affected = affected_paths(dropped)
+        scratch = {}
+        if renames_touch(self.entries, affected):
+            # a surviving rename moves state across an affected path:
+            # restricted replay can't order that — full rebuild (rare)
+            for e in self.entries:
+                _apply_to_table(scratch, e)
+            for p, v in scratch.items():
+                self._mirror_set(p, v)
+            for p in list(self.mirror):
+                if p not in scratch:
+                    self._mirror_del(p)
+            return
         for e in self.entries:
-            self._apply(e)
+            if e.path in affected:
+                _apply_to_table(scratch, e)
+        for p in affected:
+            if p in scratch:
+                self._mirror_set(p, scratch[p])
+            else:
+                self._mirror_del(p)
 
     def close(self):
         self._f.close()
@@ -164,3 +240,13 @@ class ChainClient:
                                     entries[-1].seqno)
         assert ack >= entries[-1].seqno, (ack, entries[-1].seqno)
         return self.replicated_seqno
+
+    def digest_fanout(self, through_seqno: int) -> None:
+        """Make every replica digest its slot through ``through_seqno``
+        with ONE writer RPC: the request forwards down the chain
+        (``digest_slot_chain``) instead of the writer paying a
+        round-trip per replica."""
+        if not self.chain:
+            return
+        self.transport.rpc(self.chain[0], "digest_slot_chain",
+                           self.proc_id, through_seqno, self.chain[1:])

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import threading
 import struct
 import time
 import zlib
@@ -54,6 +55,10 @@ N_WRITE = 4  # delta needle: data patched at byte `offset` of the value
 # magic, op, path_len, data_len, offset, crc
 _NEEDLE = struct.Struct("<IBHIQi")
 _NOFF = struct.Struct("<Q")
+
+# userspace append buffer: durability is batched at commit() anyway,
+# so needle appends should not pay a syscall each
+_WRITE_BUF = 1 << 20
 
 _SEG_FMT = "seg-%08d.log"
 
@@ -106,6 +111,10 @@ class SegmentStore:
         self._active = None
         self._active_off = 0
         self._dirty = False
+        # guards segment files / fd cache / index mutation: the SharedFS
+        # background digest worker appends and compacts concurrently
+        # with reader threads (LibFS tier walks)
+        self._lock = threading.RLock()
         self._recover()
         self._open_active()
 
@@ -129,14 +138,16 @@ class SegmentStore:
         if ids and os.path.getsize(self._seg_path(self._active_id)) \
                 >= self.segment_bytes:
             self._active_id += 1
-        self._active = open(self._seg_path(self._active_id), "ab")
+        self._active = open(self._seg_path(self._active_id), "ab",
+                            buffering=_WRITE_BUF)
         self._active_off = self._active.tell()
 
     def _rotate(self) -> None:
         self._active.flush()
         self._active.close()
         self._active_id += 1
-        self._active = open(self._seg_path(self._active_id), "ab")
+        self._active = open(self._seg_path(self._active_id), "ab",
+                            buffering=_WRITE_BUF)
         self._active_off = 0
 
     def _append(self, op: int, path: str, data: bytes,
@@ -264,68 +275,73 @@ class SegmentStore:
 
     # -- data path ------------------------------------------------------------
     def put(self, path: str, data: bytes) -> None:
-        seg_id, voff = self._append(N_PUT, path, data)
-        self._index_put(path, seg_id, voff, len(data))
-        self.lru[path] = time.monotonic()
-        self._maybe_compact()
+        with self._lock:
+            seg_id, voff = self._append(N_PUT, path, data)
+            self._index_put(path, seg_id, voff, len(data))
+            self.lru[path] = time.monotonic()
+            self._maybe_compact()
 
     def patch(self, path: str, offset: int, data: bytes) -> None:
         """Byte-range write: one delta-needle append, never a rewrite of
         the base value. Chains longer than ``max_patch_chain`` are
         materialized into a single fresh needle to bound read fan-in."""
-        seg_id, voff = self._append(N_WRITE, path, data, offset)
-        self._index_patch(path, seg_id, voff, len(data), offset)
-        self.lru[path] = time.monotonic()
-        ch = self.index.get(path)
-        if isinstance(ch, _PatchChain) \
-                and len(ch.patches) > self.max_patch_chain:
-            merged = self._assemble(ch)
-            self.put(path, merged)  # old chain becomes dead bytes
-            return
-        self._maybe_compact()
+        with self._lock:
+            seg_id, voff = self._append(N_WRITE, path, data, offset)
+            self._index_patch(path, seg_id, voff, len(data), offset)
+            self.lru[path] = time.monotonic()
+            ch = self.index.get(path)
+            if isinstance(ch, _PatchChain) \
+                    and len(ch.patches) > self.max_patch_chain:
+                merged = self._assemble(ch)
+                self.put(path, merged)  # old chain becomes dead bytes
+                return
+            self._maybe_compact()
 
     def get(self, path: str) -> Optional[bytes]:
-        loc = self.index.get(path)
-        if loc is None:
-            return None
-        self.lru[path] = time.monotonic()
-        if isinstance(loc, _PatchChain):
-            return self._assemble(loc)
-        return self._read_loc(loc)
+        with self._lock:
+            loc = self.index.get(path)
+            if loc is None:
+                return None
+            self.lru[path] = time.monotonic()
+            if isinstance(loc, _PatchChain):
+                return self._assemble(loc)
+            return self._read_loc(loc)
 
     def get_range(self, path: str, offset: int,
                   length: int) -> Optional[bytes]:
         """Exact-range read: one ``os.pread`` of just the requested
         bytes when a single needle covers the range (clamped at EOF)."""
-        loc = self.index.get(path)
-        if loc is None:
-            return None
-        self.lru[path] = time.monotonic()
-        if not isinstance(loc, _PatchChain):
-            seg_id, voff, vlen = loc
-            if offset >= vlen:
-                return b""
-            return self._read_at(seg_id, voff + offset,
-                                 min(length, vlen - offset))
-        overlapped = False
-        for boff, seg_id, voff, vlen in reversed(loc.patches):
-            if boff <= offset and offset + length <= boff + vlen:
-                # latest patch fully covering the range: serve it direct
-                return self._read_at(seg_id, voff + (offset - boff), length)
-            if boff < offset + length and offset < boff + vlen:
-                overlapped = True  # a newer patch partially overlaps
-                break
-        if not overlapped:
-            base = loc.base
-            if base is not None and offset + length <= base[2]:
-                # range lies wholly in the base needle: one pread
-                return self._read_at(base[0], base[1] + offset, length)
-            if base is None or offset >= base[2]:
-                # hole between/past patches: zeros, clamped to length
-                end = min(offset + length, loc.length)
-                return b"\x00" * max(0, end - offset)
-        full = self._assemble(loc)
-        return full[offset:offset + length]
+        with self._lock:
+            loc = self.index.get(path)
+            if loc is None:
+                return None
+            self.lru[path] = time.monotonic()
+            if not isinstance(loc, _PatchChain):
+                seg_id, voff, vlen = loc
+                if offset >= vlen:
+                    return b""
+                return self._read_at(seg_id, voff + offset,
+                                     min(length, vlen - offset))
+            overlapped = False
+            for boff, seg_id, voff, vlen in reversed(loc.patches):
+                if boff <= offset and offset + length <= boff + vlen:
+                    # latest patch fully covering the range: direct
+                    return self._read_at(seg_id, voff + (offset - boff),
+                                         length)
+                if boff < offset + length and offset < boff + vlen:
+                    overlapped = True  # a newer patch partially overlaps
+                    break
+            if not overlapped:
+                base = loc.base
+                if base is not None and offset + length <= base[2]:
+                    # range lies wholly in the base needle: one pread
+                    return self._read_at(base[0], base[1] + offset, length)
+                if base is None or offset >= base[2]:
+                    # hole between/past patches: zeros, clamped to length
+                    end = min(offset + length, loc.length)
+                    return b"\x00" * max(0, end - offset)
+            full = self._assemble(loc)
+            return full[offset:offset + length]
 
     def _assemble(self, ch: _PatchChain) -> bytes:
         """Latest-wins assembly of a patch chain (zeros-filled base)."""
@@ -352,27 +368,30 @@ class SegmentStore:
         return os.pread(fd, size, off)
 
     def delete(self, path: str) -> None:
-        if path not in self.index:
-            return
-        self._append(N_DELETE, path, b"")
-        self._index_drop(path)
-        self._maybe_compact()
+        with self._lock:
+            if path not in self.index:
+                return
+            self._append(N_DELETE, path, b"")
+            self._index_drop(path)
+            self._maybe_compact()
 
     def rename(self, src: str, dst: str) -> None:
-        if src not in self.index:
-            return
-        self._append(N_RENAME, src, dst.encode())
-        self._index_rename(src, dst)
-        self.lru[dst] = time.monotonic()
+        with self._lock:
+            if src not in self.index:
+                return
+            self._append(N_RENAME, src, dst.encode())
+            self._index_rename(src, dst)
+            self.lru[dst] = time.monotonic()
 
     def commit(self) -> None:
         """Flush the batch to the persistence domain (one flush covers
         every append since the previous commit)."""
-        if self._dirty:
-            self._active.flush()
-            if self.fsync_data:
-                os.fsync(self._active.fileno())
-            self._dirty = False
+        with self._lock:
+            if self._dirty:
+                self._active.flush()
+                if self.fsync_data:
+                    os.fsync(self._active.fileno())
+                self._dirty = False
 
     # -- queries (Area-compatible) ---------------------------------------------
     def contains(self, path: str) -> bool:
@@ -418,11 +437,16 @@ class SegmentStore:
         replay applies segments in ascending id order — a crash at any
         point recovers either the old or the new (equivalent) state.
         """
+        with self._lock:
+            self._do_compact()
+
+    def _do_compact(self) -> None:
         self.commit()
         old_ids = self._seg_ids()
         self._active.close()
         self._active_id = (old_ids[-1] if old_ids else 0) + 1
-        self._active = open(self._seg_path(self._active_id), "ab")
+        self._active = open(self._seg_path(self._active_id), "ab",
+                            buffering=_WRITE_BUF)
         self._active_off = 0
         self.disk_bytes = 0
         live = sorted(self.index.items(),

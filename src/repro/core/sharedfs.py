@@ -13,7 +13,9 @@ single ``commit()`` instead of a per-op manifest flush.
 from __future__ import annotations
 
 import os
-from typing import Dict, List, Optional, Tuple
+import queue
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import log as L
 from repro.core.cluster import ClusterManager
@@ -44,12 +46,23 @@ class SharedFS:
         self.cold = Area(os.path.join(root_dir, "ssd", "cold"),
                          fsync_data=fsync_data)
         self.slots: Dict[str, ReplicaSlot] = {}
+        # path -> the slot holding its freshest undigested state (the
+        # reverse index behind O(1) read_any/in_slot tier lookups)
+        self.slot_index: Dict[str, ReplicaSlot] = {}
         self.lease_mgr = LeaseManager(node_id, self._revoke_holder)
         self.local_procs: Dict[str, object] = {}  # proc_id -> LibState
         self.permissions: Dict[str, tuple] = {}  # prefix -> (read, write)
         self.recovered_epoch = 0
         self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
-                      "invalidated": 0}
+                      "invalidated": 0, "bg_jobs": 0}
+        # background digest worker (paper §3.1: SharedFS digests sealed
+        # log regions while LibFS keeps appending). One thread per node
+        # daemon, started lazily; all digest application — background or
+        # writer-inline — serializes on _digest_lock.
+        self._digest_lock = threading.RLock()
+        self._digest_q: "queue.Queue" = queue.Queue()
+        self._digest_thread: Optional[threading.Thread] = None
+        self._abandon = False  # node death: skip queued jobs
         transport.register_endpoint(node_id, self)
 
     # -- permissions (single administrative domain, paper §3.2) -------------
@@ -65,12 +78,59 @@ class SharedFS:
                 best, decision = len(pre), rw
         return decision[0] if mode == READ else decision[1]
 
+    # -- background digest worker (pipeline, paper §3.1) ---------------------
+    def submit_digest(self, fn: Callable[[], None],
+                      abort: Optional[Callable[[], None]] = None) -> None:
+        """Queue background digest work; the writer returns immediately
+        and keeps appending to its fresh active log region. ``abort``
+        runs instead of ``fn`` if the node dies with the job still
+        queued — so waiters on the job's completion never hang."""
+        t = self._digest_thread
+        if t is None or not t.is_alive():
+            t = threading.Thread(target=self._digest_loop,
+                                 name=f"digest-{self.node_id}", daemon=True)
+            self._digest_thread = t
+            t.start()
+        self._digest_q.put((fn, abort))
+
+    def _digest_loop(self) -> None:
+        while True:
+            item = self._digest_q.get()
+            try:
+                if item is None:
+                    return
+                fn, abort = item
+                if not self._abandon:
+                    fn()
+                    self.stats["bg_jobs"] += 1
+                elif abort is not None:
+                    abort()
+            finally:
+                self._digest_q.task_done()
+
+    def drain_digests(self) -> None:
+        """Barrier: block until every queued digest job has completed."""
+        self._digest_q.join()
+
+    def shutdown(self, abandon: bool = False) -> None:
+        """Stop the digest worker. ``abandon=True`` models node death:
+        queued jobs are skipped instead of run (a dead node must not
+        keep digesting), and the join is best-effort."""
+        self._abandon = abandon
+        t = self._digest_thread
+        if t is not None and t.is_alive():
+            self._digest_q.put(None)
+            # abandon: best-effort join — a job wedged on dead-node IO
+            # must not stall the failure path; it skips on wake anyway
+            t.join(timeout=None if not abandon else 0.25)
+        self._digest_thread = None
+
     # -- replica slots (chain replication target) ----------------------------
     def slot_for(self, proc_id: str) -> ReplicaSlot:
         if proc_id not in self.slots:
             slot = ReplicaSlot(os.path.join(self.root, "nvm", "repl",
                                             f"{proc_id}.log"),
-                               self.fsync_data)
+                               self.fsync_data, index=self.slot_index)
             self.slots[proc_id] = slot
             self.transport.register_region(self.node_id, f"slot/{proc_id}",
                                            slot)
@@ -81,8 +141,9 @@ class SharedFS:
 
     def in_slot(self, path: str) -> bool:
         """Whether any replica slot's mirror holds fresher (undigested)
-        state for the path — the tier `read_any` consults first."""
-        return any(path in s.mirror for s in self.slots.values())
+        state for the path — one reverse-index dict hit, not a scan of
+        every slot's mirror."""
+        return path in self.slot_index
 
     def chain_continue(self, proc_id: str, data: bytes,
                        rest: List[str]) -> int:
@@ -96,11 +157,16 @@ class SharedFS:
             # was coalesced out of a batch it already acked (the
             # coalesced stream is replay-equivalent), and appending it
             # now would replay stale data over newer and unsort the
-            # slot's seqno index.
-            last = slot.entries[-1].seqno if slot.entries else 0
-            for e in incoming:
-                if e.seqno > last:
-                    slot.write(None, e.encode())
+            # slot's seqno index. The digested watermark counts as the
+            # tail when the slot is empty: process recovery re-ships the
+            # whole surviving log suffix, which may include entries a
+            # background digest already applied here.
+            with slot._lock:
+                last = slot.entries[-1].seqno if slot.entries \
+                    else slot.digested_seqno
+                for e in incoming:
+                    if e.seqno > last:
+                        slot.write(None, e.encode())
         if rest:
             head, tail = rest[0], rest[1:]
             self.transport.one_sided_write(head, f"slot/{proc_id}", data)
@@ -111,28 +177,41 @@ class SharedFS:
     # -- digest / eviction (paper §A.1) ----------------------------------------
     def digest_slot(self, proc_id: str, through_seqno: int) -> int:
         """Apply a process's replicated log prefix into the hot area."""
-        slot = self.slot_for(proc_id)
-        applied = 0
-        for e in slot.entries:
-            if e.seqno > through_seqno:
-                break
-            self._apply_entry(e)
-            applied += 1
-        self._evict_if_needed()
-        self._commit_areas()
-        # truncate only after the applied entries are durable in the
-        # areas — a crash in between must never lose the digested range
-        slot.truncate_through(through_seqno)
-        self.stats["digests"] += 1
+        with self._digest_lock:
+            slot = self.slot_for(proc_id)
+            applied = 0
+            for e in slot.entries:
+                if e.seqno > through_seqno:
+                    break
+                self._apply_entry(e)
+                applied += 1
+            self._evict_if_needed()
+            self._commit_areas()
+            # truncate only after the applied entries are durable in the
+            # areas — a crash in between must never lose the digested range
+            slot.truncate_through(through_seqno)
+            self.stats["digests"] += 1
+            return applied
+
+    def digest_slot_chain(self, proc_id: str, through_seqno: int,
+                          rest: List[str]) -> int:
+        """RPC: digest this node's slot, then forward down the chain —
+        the writer pays one RPC for the whole replica set instead of a
+        round-trip per replica."""
+        applied = self.digest_slot(proc_id, through_seqno)
+        if rest:
+            self.transport.rpc(rest[0], "digest_slot_chain", proc_id,
+                               through_seqno, rest[1:])
         return applied
 
     def digest_entries(self, entries: List[L.Entry]) -> int:
-        for e in entries:
-            self._apply_entry(e)
-        self.stats["digests"] += 1
-        self._evict_if_needed()
-        self._commit_areas()
-        return len(entries)
+        with self._digest_lock:
+            for e in entries:
+                self._apply_entry(e)
+            self.stats["digests"] += 1
+            self._evict_if_needed()
+            self._commit_areas()
+            return len(entries)
 
     def _commit_areas(self) -> None:
         """One flush per digest batch (vs the seed's per-op flush)."""
@@ -227,29 +306,30 @@ class SharedFS:
         the remote-serving mode (see ``read_remote``): it reports a
         miss instead of fetching, which both breaks the RPC cycle two
         base-less nodes would otherwise enter and lets the remote
-        caller continue its own tier walk."""
-        for slot in self.slots.values():
-            if path in slot.mirror:
-                v = slot.mirror[path]
-                if isinstance(v, ExtentOverlay):
-                    base = b""
-                    if not v.from_zero:
-                        # explicit None checks: an empty-bytes hot value
-                        # is a real base and must not fall through to a
-                        # stale cold copy
-                        base = self.hot.get(path)
-                        if base is None:
-                            base = self.cold.get(path)
-                        if base is None:
-                            if not fetch_base:
-                                return False, None
-                            base = self._fetch_base(path)
-                        if base is None:
-                            base = b""
-                    return True, v.apply_to(base)
-                if isinstance(v, bytearray):  # in-place-patched mirror
-                    return True, bytes(v)
-                return True, v  # full value, or tombstone (None)
+        caller continue its own tier walk. Slot lookup is one reverse-
+        index dict hit (``slot_index``), not a scan over every slot."""
+        slot = self.slot_index.get(path)
+        if slot is not None and path in slot.mirror:
+            v = slot.mirror[path]
+            if isinstance(v, ExtentOverlay):
+                base = b""
+                if not v.from_zero:
+                    # explicit None checks: an empty-bytes hot value
+                    # is a real base and must not fall through to a
+                    # stale cold copy
+                    base = self.hot.get(path)
+                    if base is None:
+                        base = self.cold.get(path)
+                    if base is None:
+                        if not fetch_base:
+                            return False, None
+                        base = self._fetch_base(path)
+                    if base is None:
+                        base = b""
+                return True, v.apply_to(base)
+            if isinstance(v, bytearray):  # in-place-patched mirror
+                return True, bytes(v)
+            return True, v  # full value, or tombstone (None)
         v = self.hot.get(path)
         if v is not None:
             return True, v
@@ -264,31 +344,59 @@ class SharedFS:
 
     # -- leases -------------------------------------------------------------------
     def lease_acquire(self, holder: str, path: str, mode: str,
-                      subtree: str = "/") -> bool:
+                      subtree: str = "/") -> Tuple[str, str, float]:
+        """Acquire (or refresh) a lease; returns ``(lease_path, mode,
+        expires_at)`` so the holder can cache the grant and skip the
+        manager entirely until it expires or is revoked (paper §3.3)."""
         if not self.check_permission(path, mode):
             raise PermissionError(f"{holder}: {mode} {path}")
         mgr_node = self.cluster.manager_for(subtree, self.node_id)
         now = self.cluster.clock()
         if mgr_node == self.node_id:
-            self.lease_mgr.acquire(holder, path, mode, now)
-            return True
+            lease = self.lease_mgr.acquire(holder, path, mode, now)
+            return (lease.path, lease.mode, lease.expires_at)
         return self.transport.rpc(mgr_node, "lease_acquire_local", holder,
                                   path, mode)
 
     def lease_acquire_local(self, holder: str, path: str,
-                            mode: str) -> bool:
-        self.lease_mgr.acquire(holder, path, mode, self.cluster.clock())
-        return True
+                            mode: str) -> Tuple[str, str, float]:
+        lease = self.lease_mgr.acquire(holder, path, mode,
+                                       self.cluster.clock())
+        return (lease.path, lease.mode, lease.expires_at)
 
     def _revoke_holder(self, holder: str, path: str) -> None:
-        """Grace-period revocation: make the holder flush + digest."""
+        """Grace-period revocation: make the holder drop its cached
+        lease and flush + digest. A holder living on another node is
+        reached by RPC — with lease caching it would otherwise keep
+        writing against a revoked grant until the TTL ran out."""
         proc = self.local_procs.get(holder)
         if proc is not None:
-            proc.flush_for_revocation()
+            proc.handle_revocation(path)
+            return
+        for nid in self.cluster.alive_nodes():
+            if nid == self.node_id:
+                continue
+            try:
+                if self.transport.rpc(nid, "revoke_holder", holder, path):
+                    return
+            except Exception:
+                continue  # dead node: its procs died with it
+
+    def revoke_holder(self, holder: str, path: str) -> bool:
+        """RPC: revoke a lease held by one of this node's processes."""
+        proc = self.local_procs.get(holder)
+        if proc is None:
+            return False
+        proc.handle_revocation(path)
+        return True
 
     # -- process failure (LibFS recovery, paper §3.4) -------------------------------
     def recover_dead_process(self, proc_id: str) -> int:
-        """Idempotent log-based eviction of a dead process's updates."""
+        """Idempotent log-based eviction of a dead process's updates.
+        Drains this node's digest worker first so an in-flight sealed
+        region handed over before the death lands before the slot is
+        digested (recovery must see a settled pipeline)."""
+        self.drain_digests()
         slot = self.slots.get(proc_id)
         applied = 0
         if slot is not None:

@@ -16,17 +16,25 @@ Crash-consistency modes (paper §3):
   optimistic  — fsync() only persists locally; dsync() coalesces (drops
                 superseded updates) and replicates, wrapped in a TXN
                 barrier so replicated batches apply atomically.
+
+Digest pipeline (paper §3.1): when the log crosses its threshold the
+writer *seals* the active region and hands it to the node's SharedFS
+digest worker, then keeps appending — replicate/apply/fan-out/truncate
+all happen off the put/write critical path. The writer blocks only when
+a second seal arrives before the first digest finished (backpressure).
+Leases are cached process-side until they expire or are revoked, so the
+steady-state per-op lease cost is one dict probe.
 """
 from __future__ import annotations
 
-import time
+import threading
 from collections import OrderedDict
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import log as L
 from repro.core.extents import ExtentOverlay
-from repro.core.leases import READ, WRITE
-from repro.core.log import UpdateLog
+from repro.core.leases import READ, WRITE, covers
+from repro.core.log import SealedRegion, UpdateLog
 from repro.core.replication import ChainClient
 from repro.core.sharedfs import SharedFS
 
@@ -68,12 +76,23 @@ class DramCache:
         self.bytes = 0
 
 
+class _DigestJob:
+    """One sealed region in flight on the SharedFS digest worker."""
+
+    __slots__ = ("region", "done", "error")
+
+    def __init__(self, region: SealedRegion):
+        self.region = region
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+
+
 class LibState:
     def __init__(self, proc_id: str, sharedfs: SharedFS, chain: List[str],
                  reserves: Optional[List[str]] = None, *,
                  mode: str = "pessimistic", log_capacity: int = 1 << 30,
                  dram_capacity: int = 2 << 30, subtree: str = "/",
-                 fsync_data: bool = False):
+                 fsync_data: bool = False, pipeline_digests: bool = True):
         assert mode in ("pessimistic", "optimistic")
         self.proc_id = proc_id
         self.sfs = sharedfs
@@ -93,18 +112,60 @@ class LibState:
             sharedfs.transport.rpc(n, "ensure_slot", proc_id)
         sharedfs.local_procs[proc_id] = self
         self.digest_threshold = 0.75
+        # pipeline state: threshold digests run on the SharedFS worker
+        # (pipeline_digests=False restores the old inline behavior —
+        # the fig13 same-run comparison toggle)
+        self.pipeline_digests = pipeline_digests
+        self._inflight: Optional[_DigestJob] = None
+        # serializes chain replication (writer fsync/dsync vs the digest
+        # worker) so the replicated stream stays a seqno-ordered prefix
+        self._repl_lock = threading.RLock()
+        # lease cache: lease_path -> (mode, expires_at); consulted per
+        # op, dropped on revocation/expiry (paper §3.3)
+        self._lease_cache: Dict[str, Tuple[str, float]] = {}
         self.stats = {"puts": 0, "range_writes": 0, "gets": 0,
                       "l1_hits": 0, "l2_hits": 0, "remote_hits": 0,
-                      "digests": 0, "coalesced_out": 0}
+                      "digests": 0, "inline_digests": 0, "bg_digests": 0,
+                      "seals": 0, "backpressure_waits": 0,
+                      "seal_deferrals": 0,
+                      "coalesced_out": 0, "lease_cache_hits": 0,
+                      "lease_acquires": 0}
 
     # -- leases ---------------------------------------------------------------
     def _lease(self, path: str, mode: str) -> None:
-        self.sfs.lease_acquire(self.proc_id, path, mode, self.subtree)
+        now = self.cluster.clock()
+        probe = path
+        while True:  # exact path, then each ancestor (subtree leases)
+            ent = self._lease_cache.get(probe)
+            if ent is not None and now < ent[1] \
+                    and (ent[0] == WRITE or mode == READ):
+                self.stats["lease_cache_hits"] += 1
+                return
+            if probe == "/":
+                break
+            probe = probe.rsplit("/", 1)[0] or "/"
+        lpath, lmode, exp = self.sfs.lease_acquire(
+            self.proc_id, path, mode, self.subtree)
+        self._lease_cache[lpath] = (lmode, exp)
+        self.stats["lease_acquires"] += 1
 
     def lease_subtree(self, path: str) -> None:
         """Acquire an exclusive subtree (directory) lease — e.g. a
         Maildir before delivering into it (paper §3.3)."""
         self._lease(path, WRITE)
+
+    def handle_revocation(self, path: str) -> None:
+        """Manager-initiated revocation (grace period): drop every
+        cached lease overlapping ``path``, drop DRAM-cached reads under
+        it (the new holder is about to write — they would go stale),
+        then flush + digest so the next holder sees our updates through
+        its SharedFS."""
+        for p in [p for p in self._lease_cache
+                  if covers(p, path) or covers(path, p)]:
+            del self._lease_cache[p]
+        for p in [p for p in self.dram.data if covers(path, p)]:
+            self.dram.invalidate(p)
+        self.flush_for_revocation()
 
     # -- write path -------------------------------------------------------------
     def put(self, path: str, data: bytes) -> None:
@@ -113,7 +174,7 @@ class LibState:
         self.stats["puts"] += 1
         self.dram.invalidate(path)
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
-            self.digest()
+            self._threshold_digest()
 
     def write(self, path: str, data: bytes, offset: int = 0) -> None:
         """Byte-range write (paper §3: IO-operation granularity). Logs,
@@ -124,7 +185,24 @@ class LibState:
         self.stats["range_writes"] += 1
         self.dram.invalidate(path)
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
-            self.digest()
+            self._threshold_digest()
+
+    def _threshold_digest(self) -> None:
+        if not self.pipeline_digests:
+            self.digest()  # pre-pipeline behavior: digest inline
+            return
+        job = self._inflight
+        if job is not None and not job.done.is_set() \
+                and self.log.bytes < self.log.capacity:
+            # a digest is still in flight and the active region has
+            # headroom: defer the seal instead of blocking — a slow
+            # digest (IO stall) absorbs into headroom, and the next
+            # threshold crossing seals a slightly larger region.
+            # Hard-full (bytes >= capacity) is the true backpressure
+            # point: seal_and_digest below then blocks on the reap.
+            self.stats["seal_deferrals"] += 1
+            return
+        self.seal_and_digest()
 
     def delete(self, path: str) -> None:
         self._lease(path, WRITE)
@@ -135,12 +213,16 @@ class LibState:
         self._lease(src, WRITE)
         self._lease(dst, WRITE)
         v = self.log.index.get(src, self._MISS)
-        if isinstance(v, ExtentOverlay) or v is self._MISS:
+        if isinstance(v, ExtentOverlay) or v is self._MISS \
+                or self.log.sealed is not None:
             # materialize src into the log first: a partial overlay (or a
             # value living only below the log) would otherwise detach
             # from its base when the name moves — the replicated stream
             # then carries PUT(src) + RENAME, and read-your-writes holds
-            # for renames of digested data too.
+            # for renames of digested data too. A pending seal counts:
+            # the reap will truncate the sealed region out from under a
+            # rename appended to the active one, so the src value must
+            # ride along in the active region.
             full = self.get(src)
             if full is not None:
                 self.log.append(L.OP_PUT, src, full)
@@ -151,13 +233,17 @@ class LibState:
     def fsync(self) -> None:
         self.log.persist()
         if self.mode == "pessimistic":
-            self._replicate(coalesce=False)
+            with self._repl_lock:
+                self._replicate(coalesce=False)
 
     def dsync(self) -> None:
         self.log.persist()
-        self._replicate(coalesce=(self.mode == "optimistic"))
+        with self._repl_lock:
+            self._replicate(coalesce=(self.mode == "optimistic"))
 
     def _replicate(self, coalesce: bool) -> None:
+        """Replicate everything past the chain's watermark — spanning a
+        seal boundary if one is pending. Caller holds ``_repl_lock``."""
         since = self.chain.replicated_seqno
         pending = self.log.entries_since(since)
         if not pending:
@@ -249,18 +335,104 @@ class LibState:
         full = self.get(path)
         return None if full is None else full[offset:offset + length]
 
-    # -- digest (replicate + apply + truncate) -------------------------------------
-    def digest(self) -> None:
+    # -- digest pipeline (seal -> background replicate+apply+fanout -> reap) -----
+    def seal_and_digest(self) -> None:
+        """Seal the active log region and hand it to the SharedFS digest
+        worker; appends continue into a fresh active region while the
+        worker replicates, applies, and fans out ``digest_slot`` down
+        the chain. Blocks only when the previous seal has not finished
+        digesting (backpressure), or — after a failed background digest
+        — to retry it inline."""
+        self.drain()
+        region = self.log.seal()
+        if region is None:
+            return
         self.log.persist()
-        self._replicate(coalesce=(self.mode == "optimistic"))
+        job = _DigestJob(region)
+        self._inflight = job
+        self.stats["seals"] += 1
+        self.stats["digests"] += 1
+        self.sfs.submit_digest(lambda: self._digest_region(job),
+                               abort=lambda: self._abort_job(job))
+
+    @staticmethod
+    def _abort_job(job: _DigestJob) -> None:
+        """Node died with the seal still queued: fail the job (the
+        sealed region stays in the log for recovery) and release any
+        waiter — crash()/drain() must not hang on a dead worker."""
+        job.error = RuntimeError("background digest abandoned: node down")
+        job.done.set()
+
+    def _digest_region(self, job: _DigestJob) -> None:
+        """Worker-side digest of one sealed region: replicate the not-
+        yet-replicated suffix, apply locally, fan the digest down the
+        chain. Log truncation (the reap) stays writer-side."""
+        region = job.region
+        try:
+            with self._repl_lock:
+                since = self.chain.replicated_seqno
+                pending = region.entries_since(since)
+                if pending:
+                    if self.mode == "optimistic":
+                        reduced = UpdateLog.coalesce(pending)
+                        self.stats["coalesced_out"] += \
+                            len(pending) - len(reduced)
+                        self.chain.replicate(reduced)
+                        self.chain.replicated_seqno = pending[-1].seqno
+                    else:
+                        self.chain.replicate(
+                            pending, region.encoded_since(since))
+            self.sfs.digest_entries(region.entries)
+            # no repl lock here: fan-out truncation and concurrent fsync
+            # appends serialize per slot (disjoint seqno ranges), and
+            # holding the lock across the chain RPC would stall the
+            # writer's fsync for the whole remote apply
+            self.chain.digest_fanout(region.last_seqno)
+            self.log.reap_files(region.last_seqno)  # file IO off-path
+        except BaseException as e:  # surfaced at the next drain point
+            job.error = e
+        finally:
+            job.done.set()
+
+    def _reap(self, wait: bool) -> None:
+        """Writer-side completion of a background digest: drop the
+        sealed region from the in-memory log view (the worker already
+        rotated the file). On worker failure the sealed region stays in
+        the log; the next synchronous digest retries inline."""
+        job = self._inflight
+        if job is None:
+            return
+        if not job.done.is_set():
+            if not wait:
+                return
+            self.stats["backpressure_waits"] += 1
+            job.done.wait()
+        self._inflight = None
+        if job.error is None:
+            self.log.drop_sealed()
+            self.stats["bg_digests"] += 1
+
+    def drain(self) -> None:
+        """Settle the pipeline: wait out any in-flight background digest
+        and reap it; retry a failed one inline (raising its error)."""
+        self._reap(wait=True)
+        if self.log.sealed is not None:
+            self.digest()
+
+    # -- digest (synchronous: replicate + apply + truncate) ----------------------
+    def digest(self) -> None:
+        self._reap(wait=True)
+        self.log.persist()
+        with self._repl_lock:
+            self._replicate(coalesce=(self.mode == "optimistic"))
         upto = self.log.last_seqno
         # every undigested entry has seqno <= last_seqno by construction;
         # apply the already-materialized list directly
         self.sfs.digest_entries(self.log.entries_since(0))
-        for nid in self.chain.chain:
-            self.transport.rpc(nid, "digest_slot", self.proc_id, upto)
+        self.chain.digest_fanout(upto)
         self.log.truncate_through(upto)
         self.stats["digests"] += 1
+        self.stats["inline_digests"] += 1
 
     def flush_for_revocation(self) -> None:
         """Lease revocation grace: replicate + digest so the next holder
@@ -270,7 +442,16 @@ class LibState:
     # -- lifecycle ---------------------------------------------------------------
     def crash(self) -> None:
         """Simulate process death: volatile state is gone; the NVM log and
-        the replicas' slots survive."""
+        the replicas' slots survive. A sealed region already handed to
+        the SharedFS worker is the *daemon's* work — it completes (the
+        daemon outlives the process) but the log file is never reaped,
+        so recovery sees the full surviving log (re-digest is
+        idempotent; ``chain_continue`` dedups via the slots' digested
+        watermark)."""
+        job = self._inflight
+        if job is not None:
+            job.done.wait()
+            self._inflight = None
         self.dram.clear()
         self.log.close()
 
@@ -278,6 +459,7 @@ class LibState:
         self.digest()
         self.sfs.lease_mgr.release_all(self.proc_id)
         self.sfs.local_procs.pop(self.proc_id, None)
+        self._lease_cache.clear()
         self.log.close()
 
 
@@ -286,6 +468,9 @@ def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
     """LibFS recovery (paper §3.4): digest the dead process's local log
     (idempotent), release its leases, and hand back a fresh LibState that
     sees all completed writes."""
+    # settle the node's digest pipeline first: a sealed region the dead
+    # process handed over must land before we re-read its log file
+    sharedfs.drain_digests()
     log_path = f"{sharedfs.root}/nvm/proc/{proc_id}.log"
     tmp = UpdateLog(log_path, fsync_data=False)
     entries = tmp.entries_since(0)

@@ -1,0 +1,413 @@
+"""Digest pipeline (seal -> background digest -> reap), lease cache,
+and the indexed read-tier structures (slot reverse index, incremental
+slot truncation, holder/path-indexed lease table)."""
+import threading
+
+import pytest
+
+from repro.core import AssiseCluster
+from repro.core import log as L
+from repro.core.leases import LeaseTable, READ, WRITE
+from repro.core.log import Entry, UpdateLog
+from repro.core.replication import ReplicaSlot
+
+
+# -- UpdateLog seal/double-buffer ---------------------------------------------
+
+def test_log_seal_spans_boundary(tmp_path):
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    for i in range(4):
+        lg.append(L.OP_PUT, f"/s/{i}", bytes([i]) * 8)
+    region = lg.seal()
+    assert region.last_seqno == 4 and lg.bytes == 0
+    lg.append(L.OP_PUT, "/s/9", b"after-seal")
+    # reads, entries_since and encoded_since all span the boundary
+    assert lg.index["/s/1"] == bytes([1]) * 8
+    assert lg.index["/s/9"] == b"after-seal"
+    assert [e.seqno for e in lg.entries_since(0)] == [1, 2, 3, 4, 5]
+    assert [e.seqno for e in lg.entries_since(3)] == [4, 5]
+    assert lg.encoded_since(0) == b"".join(
+        e.encode() for e in lg.entries_since(0))
+    assert lg.last_seqno == 5
+    # at most one sealed region (the pipeline's backpressure invariant)
+    with pytest.raises(RuntimeError):
+        lg.seal()
+
+
+def test_log_reap_drops_sealed_and_keeps_active(tmp_path):
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    lg.append(L.OP_PUT, "/a", b"1")
+    lg.append(L.OP_PUT, "/b", b"2")
+    region = lg.seal()
+    lg.append(L.OP_PUT, "/b", b"3")   # same path continues in active
+    lg.append(L.OP_PUT, "/c", b"4")
+    lg.truncate_through(region.last_seqno)  # the reap
+    assert lg.sealed is None
+    assert "/a" not in lg.index       # only in the digested prefix now
+    assert lg.index["/b"] == b"3"     # active entry survives the reap
+    assert lg.index["/c"] == b"4"
+    assert [e.seqno for e in lg.entries_since(0)] == [3, 4]
+    # file was rotated down to the active suffix and recovery agrees
+    lg.persist()
+    lg.close()
+    lg2 = UpdateLog(str(tmp_path / "l" / "a.log"))
+    assert [e.seqno for e in lg2.entries_since(0)] == [3, 4]
+    assert lg2.index["/b"] == b"3"
+
+
+def test_log_truncate_partial_cut_inside_sealed(tmp_path):
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    for i in range(4):
+        lg.append(L.OP_PUT, f"/p/{i}", bytes([i]))
+    lg.seal()
+    lg.append(L.OP_PUT, "/p/9", b"x")
+    lg.truncate_through(2)  # cut *inside* the sealed region
+    assert lg.sealed is None  # remainder folded back into active
+    assert [e.seqno for e in lg.entries_since(0)] == [3, 4, 5]
+    assert lg.encoded_since(0) == b"".join(
+        e.encode() for e in lg.entries_since(0))
+    assert "/p/0" not in lg.index and lg.index["/p/3"] == bytes([3])
+
+
+def test_log_incremental_index_rename_fallback(tmp_path):
+    """A surviving rename that touches a truncated path forces the full
+    index rebuild — the result must equal a from-scratch replay of the
+    survivors (callers guarantee renames never dangle: LibState.rename
+    materializes the src value when a seal is pending)."""
+    lg = UpdateLog(str(tmp_path / "l" / "a.log"))
+    lg.append(L.OP_PUT, "/r/a", b"A")
+    lg.append(L.OP_PUT, "/r/b", b"B")
+    lg.truncate_through(1)
+    lg.append(L.OP_PUT, "/r/b", b"B2")
+    lg.append(L.OP_RENAME, "/r/b", b"/r/a")  # dst /r/a was truncated
+    lg.truncate_through(2)
+    assert lg.index["/r/a"] == b"B2"
+    assert lg.index["/r/b"] is None  # tombstone
+
+
+def test_rename_across_seal_boundary_keeps_value(tmp_cluster):
+    """RENAME appended while a seal is in flight: the reap truncates the
+    sealed PUT out from under it, so the src value must ride along."""
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/rs/src", b"payload")
+    ls.seal_and_digest()                 # PUT now lives in the sealed region
+    ls.rename("/rs/src", "/rs/dst")      # active region
+    ls.drain()                           # reap drops the sealed PUT
+    assert ls.get("/rs/dst") == b"payload"
+    assert ls.get("/rs/src") is None
+    ls.digest()
+    assert ls.get("/rs/dst") == b"payload"
+    assert ls.get("/rs/src") is None
+
+
+# -- pipelined digest through the cluster -------------------------------------
+
+def test_seal_boundary_read_your_writes(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/sb/a", b"v1")
+    ls.write("/sb/a", b"X", 0)
+    ls.seal_and_digest()           # background: worker owns the region
+    ls.put("/sb/b", b"active")     # writer keeps appending meanwhile
+    ls.write("/sb/a", b"Y", 1)     # cross-boundary update of same path
+    # read-your-writes holds regardless of where the digest stands
+    assert ls.get("/sb/a") == b"XY"
+    assert ls.get("/sb/b") == b"active"
+    ls.sfs.drain_digests()
+    assert ls.get("/sb/a") == b"XY"
+    ls.drain()                     # reap: sealed region leaves the log
+    assert ls.log.sealed is None
+    assert ls.get("/sb/a") == b"XY"
+    assert ls.get("/sb/b") == b"active"
+    assert ls.stats["bg_digests"] == 1
+    assert ls.stats["inline_digests"] == 0
+
+
+def test_background_digest_lands_in_hot_area(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/bg/x", b"data")
+    ls.seal_and_digest()
+    ls.sfs.drain_digests()
+    assert ls.sfs.hot.get("/bg/x") == b"data"
+    # the chain replicas digested their slots too (fan-out ran)
+    for nid in ls.chain.chain:
+        sfs = tmp_cluster.sharedfs[nid]
+        assert not sfs.in_slot("/bg/x")
+        assert sfs.hot.get("/bg/x") == b"data"
+
+
+def test_threshold_seals_in_background_not_inline(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=2, replication=2,
+                      log_capacity=4096)
+    ls = c.open_process("p1")
+    for i in range(20):
+        ls.put(f"/th/{i}", b"z" * 512)
+    assert ls.stats["seals"] >= 1
+    assert ls.stats["inline_digests"] == 0  # never on the put path
+    for i in range(20):
+        assert ls.get(f"/th/{i}") == b"z" * 512
+    c.close()
+
+
+def test_backpressure_waits_for_inflight_seal(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    gate = threading.Event()
+    ls.sfs.submit_digest(gate.wait)    # wedge the node's digest worker
+    ls.put("/bp/a", b"1")
+    ls.seal_and_digest()               # queued behind the gate
+    ls.put("/bp/b", b"2")
+    threading.Timer(0.05, gate.set).start()
+    ls.seal_and_digest()               # must wait for the first seal
+    assert ls.stats["backpressure_waits"] >= 1
+    ls.drain()
+    assert ls.stats["bg_digests"] == 2
+    assert ls.get("/bp/a") == b"1" and ls.get("/bp/b") == b"2"
+
+
+def test_failed_background_digest_retries_inline(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/fb/a", b"v")
+    job_error = RuntimeError("injected digest failure")
+    real = ls.sfs.digest_entries
+    ls.sfs.digest_entries = lambda entries: (_ for _ in ()).throw(job_error)
+    try:
+        ls.seal_and_digest()
+        ls.sfs.drain_digests()
+    finally:
+        ls.sfs.digest_entries = real
+    ls.drain()  # reap sees the failure, retries the digest inline
+    assert ls.log.sealed is None
+    assert ls.stats["inline_digests"] == 1
+    assert ls.get("/fb/a") == b"v"
+    assert ls.sfs.hot.get("/fb/a") == b"v"
+
+
+def test_fsync_during_inflight_seal_keeps_prefix_order(tmp_cluster):
+    """Pessimistic fsync while a sealed region is still queued must not
+    let newer seqnos into the chain before the sealed ones."""
+    ls = tmp_cluster.open_process("p1")
+    gate = threading.Event()
+    ls.sfs.submit_digest(gate.wait)
+    ls.put("/po/a", b"sealed")
+    ls.seal_and_digest()
+    ls.put("/po/b", b"active")
+    t = threading.Thread(target=ls.fsync)  # spans the seal boundary
+    t.start()
+    gate.set()
+    t.join()
+    ls.drain()
+    head = tmp_cluster.sharedfs[ls.chain.chain[0]]
+    found, v = head.read_any("/po/a")
+    assert (found, v) == (True, b"sealed")
+    found, v = head.read_any("/po/b")
+    assert (found, v) == (True, b"active")
+
+
+def test_abandoned_seal_job_releases_waiters(tmp_cluster):
+    """A seal queued on a node that dies must fail the job (data stays
+    in the log for recovery) instead of leaving crash()/drain() hanging
+    on a done-event nobody will ever set."""
+    ls = tmp_cluster.open_process("p1")
+    gate = threading.Event()
+    ls.sfs.submit_digest(gate.wait)
+    ls.put("/ab/a", b"v")
+    ls.seal_and_digest()               # queued behind the gate
+    tmp_cluster.kill_node("node0")     # abandon: queued job is skipped
+    gate.set()                         # wedged worker wakes, aborts job
+    assert ls._inflight.done.wait(timeout=5)
+    assert ls._inflight.error is not None
+    ls.crash()                         # must not hang
+    assert ls._inflight is None
+
+
+def test_close_drains_pipeline(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/cl/a", b"v")
+    ls.seal_and_digest()
+    ls.close()
+    assert ls.log.sealed is None
+    sfs = tmp_cluster.sharedfs["node0"]
+    assert sfs.hot.get("/cl/a") == b"v"
+
+
+# -- lease cache ---------------------------------------------------------------
+
+def test_lease_cache_skips_manager(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/lc/a", b"1")
+    acq = ls.stats["lease_acquires"]
+    ls.put("/lc/a", b"2")
+    ls.get("/lc/a")           # WRITE lease covers the read too
+    assert ls.stats["lease_acquires"] == acq
+    assert ls.stats["lease_cache_hits"] >= 2
+
+
+def test_subtree_lease_cache_covers_children(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    ls.lease_subtree("/mail/u1")
+    acq = ls.stats["lease_acquires"]
+    ls.put("/mail/u1/new/1", b"m")
+    ls.put("/mail/u1/new/2", b"m")
+    assert ls.stats["lease_acquires"] == acq  # ancestor-walk cache hits
+
+
+def test_lease_expiry_forces_reacquire(tmp_path):
+    clk = [0.0]
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=2, replication=2,
+                      clock=lambda: clk[0])
+    ls = c.open_process("p1")
+    ls.put("/ex/a", b"1")
+    acq = ls.stats["lease_acquires"]
+    clk[0] = 100.0  # beyond LEASE_TTL: cached grant is dead
+    ls.put("/ex/a", b"2")
+    assert ls.stats["lease_acquires"] == acq + 1
+    c.close()
+
+
+def test_revocation_invalidates_cache_same_node(tmp_cluster):
+    w = tmp_cluster.open_process("w", "node0")
+    w.put("/rc/f", b"v1")
+    assert "/rc/f" in w._lease_cache
+    r = tmp_cluster.open_process("r", "node0")
+    assert r.get("/rc/f") == b"v1"  # revokes w (flush + cache drop)
+    assert "/rc/f" not in w._lease_cache
+    w.put("/rc/f", b"v2")  # re-acquires (revoking r's read lease)
+    assert r.get("/rc/f") == b"v2"
+
+
+def test_revocation_reaches_remote_holder(tmp_cluster):
+    """The lease manager lives where the first requester was; a cached
+    holder on another node must still get revoked (or it would keep
+    writing against a dead grant until the TTL)."""
+    r = tmp_cluster.open_process("r", "node1")
+    r.put("/rr/seed", b"s")         # node1 becomes the "/" lease manager
+    w = tmp_cluster.open_process("w", "node0")
+    w.put("/rr/f", b"v1")           # w acquires from node1, caches
+    assert "/rr/f" in w._lease_cache
+    assert r.get("/rr/f") == b"v1"  # conflicts: revocation crosses nodes
+    assert "/rr/f" not in w._lease_cache
+
+
+# -- slot reverse index ---------------------------------------------------------
+
+def test_slot_reverse_index_tracks_ingest_and_digest(tmp_cluster):
+    w = tmp_cluster.open_process("w", "node0")
+    w.put("/si/a", b"1")
+    w.fsync()
+    sfs1 = tmp_cluster.sharedfs[w.chain.chain[0]]
+    assert sfs1.in_slot("/si/a")
+    assert sfs1.slot_index["/si/a"] is sfs1.slots["w"]
+    assert sfs1.read_any("/si/a") == (True, b"1")
+    w.digest()
+    assert not sfs1.in_slot("/si/a")
+    assert "/si/a" not in sfs1.slot_index
+    assert sfs1.read_any("/si/a") == (True, b"1")  # hot area now
+
+
+def test_slot_reverse_index_tombstone_and_rename(tmp_cluster):
+    w = tmp_cluster.open_process("w", "node0")
+    w.put("/sr/a", b"1")
+    w.rename("/sr/a", "/sr/b")
+    w.delete("/sr/b")
+    w.fsync()
+    sfs1 = tmp_cluster.sharedfs[w.chain.chain[0]]
+    # tombstones are indexed too: a found-None must stop the tier walk
+    assert sfs1.in_slot("/sr/a") and sfs1.in_slot("/sr/b")
+    assert sfs1.read_any("/sr/a") == (True, None)
+    assert sfs1.read_any("/sr/b") == (True, None)
+
+
+# -- incremental slot truncation -------------------------------------------------
+
+def _mk_slot(tmp_path, entries, name="s.log"):
+    slot = ReplicaSlot(str(tmp_path / name))
+    for e in entries:
+        slot.write(None, e.encode())
+    return slot
+
+
+def test_slot_truncate_incremental_matches_full_replay(tmp_path):
+    es = [Entry(1, L.OP_PUT, "/a", b"A1"),
+          Entry(2, L.OP_PUT, "/b", b"B1"),
+          Entry(3, L.OP_WRITE, "/b", b"Z", 1),
+          Entry(4, L.OP_PUT, "/c", b"C1"),
+          Entry(5, L.OP_DELETE, "/a", b"")]
+    slot = _mk_slot(tmp_path, es)
+    slot.truncate_through(2)  # drops PUT /a, PUT /b
+    oracle = _mk_slot(tmp_path, es[2:], "oracle.log")
+    assert set(slot.mirror) == set(oracle.mirror)
+    for p in slot.mirror:
+        a, b = slot.mirror[p], oracle.mirror[p]
+        if hasattr(a, "extents"):
+            assert a.extents() == b.extents() and a.from_zero == b.from_zero
+        else:
+            assert a == b
+    # untouched path /c kept its value without recompute
+    assert slot.mirror["/c"] == b"C1"
+    assert slot.mirror["/a"] is None  # surviving DELETE: tombstone
+
+
+def test_slot_truncate_rename_fallback_full_rebuild(tmp_path):
+    es = [Entry(1, L.OP_PUT, "/x", b"X"),
+          Entry(2, L.OP_PUT, "/y", b"Y"),
+          Entry(3, L.OP_RENAME, "/y", b"/x")]  # survivor touches /x
+    slot = _mk_slot(tmp_path, es)
+    slot.truncate_through(1)
+    oracle = _mk_slot(tmp_path, es[1:], "oracle.log")
+    assert slot.mirror == oracle.mirror
+    assert slot.mirror["/x"] == b"Y"
+
+
+def test_slot_truncate_keeps_reverse_index_consistent(tmp_path):
+    index = {}
+    slot = ReplicaSlot(str(tmp_path / "s.log"), index=index)
+    for e in [Entry(1, L.OP_PUT, "/a", b"1"),
+              Entry(2, L.OP_PUT, "/b", b"2")]:
+        slot.write(None, e.encode())
+    assert set(index) == {"/a", "/b"}
+    slot.truncate_through(1)
+    assert set(index) == {"/b"}
+    slot.truncate_through(2)
+    assert index == {} and slot.mirror == {}
+
+
+# -- indexed lease table ----------------------------------------------------------
+
+def test_lease_table_find_uses_holder_index():
+    t = LeaseTable()
+    for i in range(50):
+        t.grant(f"/h{i}", WRITE, f"p{i}", now=0.0)
+    mine = t.grant("/mine", WRITE, "me", now=0.0)
+    assert t.find("me", "/mine/sub", WRITE, now=1.0) is mine
+    assert t.find("nobody", "/mine", READ, now=1.0) is None
+
+
+def test_lease_table_conflicting_ancestors_and_descendants():
+    t = LeaseTable()
+    up = t.grant("/a", WRITE, "p1", now=0.0)
+    down = t.grant("/a/b/c", WRITE, "p2", now=0.0)
+    other = t.grant("/z", WRITE, "p3", now=0.0)
+    got = {l.id for l in t.conflicting("/a/b", WRITE, now=1.0)}
+    assert got == {up.id, down.id}
+    assert other.id not in got
+    # shared reads never conflict
+    t2 = LeaseTable()
+    t2.grant("/r", READ, "p1", now=0.0)
+    assert t2.conflicting("/r", READ, now=1.0) == []
+
+
+def test_lease_table_release_holder_cleans_indexes():
+    t = LeaseTable()
+    t.grant("/a", WRITE, "p1", now=0.0)
+    t.grant("/b", READ, "p1", now=0.0)
+    t.grant("/c", WRITE, "p2", now=0.0)
+    assert t.release_holder("p1") == 2
+    assert "p1" not in t.by_holder
+    assert "/a" not in t.by_path and "/b" not in t.by_path
+    assert t.find("p2", "/c", WRITE, now=1.0) is not None
+
+
+def test_lease_table_expiry_cleans_indexes():
+    t = LeaseTable()
+    l = t.grant("/a", WRITE, "p1", now=0.0, ttl=1.0)
+    assert [x.id for x in t.expire(2.0)] == [l.id]
+    assert t.by_holder == {} and t.by_path == {}

@@ -25,6 +25,9 @@ _ops = st.one_of(
     st.tuples(st.just("digest"), st.none(), st.none()),
     st.tuples(st.just("fsync"), st.none(), st.none()),
     st.tuples(st.just("crash"), st.none(), st.none()),
+    # seal at a random point: the digest pipeline's background worker
+    # digests the sealed region while subsequent ops keep running
+    st.tuples(st.just("seal"), st.none(), st.none()),
 )
 
 
@@ -69,6 +72,8 @@ def test_extent_interleavings_match_flat_model(tmp_path_factory, ops):
                 ls.digest()
             elif kind == "fsync":
                 ls.fsync()
+            elif kind == "seal":
+                ls.seal_and_digest()
             elif kind == "crash":
                 ls.log.persist()
                 c.kill_process(ls)

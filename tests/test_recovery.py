@@ -1,4 +1,6 @@
 """Failure scenarios: process crash, node failover, rejoin, cascades."""
+import threading
+
 from repro.core import AssiseCluster
 
 
@@ -62,6 +64,50 @@ def test_cascaded_failure_promotes_reserve(tmp_cluster):
     assert "node2" in chain  # reserve promoted into the chain
     ls3 = tmp_cluster.failover_process("p1")
     assert ls3.get("/c/k") == b"vital"
+
+
+def test_node_dies_mid_background_digest_keeps_replicated_prefix(
+        tmp_cluster):
+    """Node loss while a sealed region sits undigested on the node's
+    wedged worker: failover must serve exactly the chain-acked prefix —
+    the sealed-but-unreplicated suffix dies with the node, and the dead
+    node's worker must not keep digesting after the failure."""
+    ls = tmp_cluster.open_process("p1")
+    gate = threading.Event()
+    ls.sfs.submit_digest(gate.wait)      # wedge node0's digest worker
+    ls.put("/bd/a", b"acked")
+    ls.fsync()                           # replicated to the chain
+    ls.put("/bd/b", b"sealed-unsynced")  # never leaves node0
+    ls.seal_and_digest()                 # queued behind the gate
+    tmp_cluster.kill_node("node0")       # dies mid-background-digest
+    gate.set()                           # worker wakes into abandonment
+    tmp_cluster.detect_failures_now()
+    ls2 = tmp_cluster.failover_process("p1")
+    assert ls2.sfs.node_id != "node0"
+    assert ls2.get("/bd/a") == b"acked"
+    assert ls2.get("/bd/b") is None
+
+
+def test_process_crash_between_background_digest_and_reap(tmp_cluster):
+    """Crash after the worker digested the sealed region but before the
+    writer reaped (truncated) the log: recovery re-reads the full log
+    file — the re-digest must be idempotent, and nothing may be lost."""
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/pr/a", b"v1")
+    ls.fsync()
+    ls.seal_and_digest()
+    ls.sfs.drain_digests()     # digest completed; reap never happens
+    ls.put("/pr/b", b"v2")     # lands in the fresh active region
+    ls.log.persist()
+    tmp_cluster.kill_process(ls)
+    ls2 = tmp_cluster.recover_process_local("p1", "node0")
+    assert ls2.get("/pr/a") == b"v1"
+    assert ls2.get("/pr/b") == b"v2"
+    # replicas converged on the same state (no stale resurrection)
+    for nid in ls2.chain.chain:
+        sfs = tmp_cluster.sharedfs[nid]
+        assert sfs.read_any("/pr/a") == (True, b"v1")
+        assert sfs.read_any("/pr/b") == (True, b"v2")
 
 
 def test_optimistic_mode_loses_only_uncoalesced_tail(tmp_path):
