@@ -16,15 +16,22 @@ ROWS = []
 
 
 def row(name: str, us_per_call: float, derived: str = "", *,
-        p50: float = None, p99: float = None, p999: float = None):
+        p50: float = None, p99: float = None, p999: float = None,
+        wire_bytes: float = None):
     """Record one benchmark row. Percentile columns are optional: tail-
     latency rows (fig13.*) carry p50/p99/p999 alongside the mean so the
-    perf-trajectory guard (benchmarks/compare.py) can diff tails too."""
+    perf-trajectory guard (benchmarks/compare.py) can diff tails too.
+    ``wire_bytes`` (per-op transport bytes, fig14.*) is deterministic —
+    the guard's ``--wire-bytes-max-ratio`` catches a regression back to
+    whole-blob remote reads independent of machine speed."""
     r = {"name": name, "us_per_call": us_per_call, "derived": derived}
     tail = ""
     if p50 is not None:
         r.update(p50=p50, p99=p99, p999=p999)
         tail = f",p50={p50:.2f},p99={p99:.2f},p999={p999:.2f}"
+    if wire_bytes is not None:
+        r["wire_bytes"] = wire_bytes
+        tail += f",wire_B/op={wire_bytes:.0f}"
     ROWS.append(r)
     print(f"{name},{us_per_call:.2f},{derived}{tail}", flush=True)
 

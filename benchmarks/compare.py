@@ -43,13 +43,20 @@ def main() -> int:
     ap.add_argument("--latest-two", action="store_true",
                     help="compare the two highest-numbered BENCH_*.json "
                          "in the repo root")
-    ap.add_argument("--prefixes", default="fig10.,table1.,fig12.,fig13.",
+    ap.add_argument("--prefixes",
+                    default="fig10.,table1.,fig12.,fig13.,fig14.",
                     help="comma-separated row-name prefixes to guard")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/old us_per_call exceeds this")
     ap.add_argument("--tail-max-ratio", type=float, default=4.0,
                     help="fail when new/old p99 or p999 exceeds this "
                          "(tail percentiles are noisier than means)")
+    ap.add_argument("--wire-bytes-max-ratio", type=float, default=1.5,
+                    help="fail when new/old wire_bytes exceeds this — "
+                         "wire bytes are deterministic transport "
+                         "accounting, so a regression back to "
+                         "whole-blob remote reads (fig14.*) fails "
+                         "regardless of machine speed")
     args = ap.parse_args()
 
     if args.latest_two:
@@ -70,12 +77,13 @@ def main() -> int:
           f"(prefixes={','.join(prefixes)} max-ratio={args.max_ratio}x "
           f"tail-max-ratio={args.tail_max_ratio}x)")
     metrics = (("us_per_call", args.max_ratio), ("p99", args.tail_max_ratio),
-               ("p999", args.tail_max_ratio))
+               ("p999", args.tail_max_ratio),
+               ("wire_bytes", args.wire_bytes_max_ratio))
     regressed, compared, missing = [], 0, 0
     for name in sorted(set(old) | set(new)):
         if not name.startswith(prefixes):
             continue
-        if name not in old or float(old[name]["us_per_call"]) <= 0:
+        if name not in old:
             print(f"  NEW     {name}: "
                   f"{float(new[name]['us_per_call']):.2f}us")
             continue

@@ -141,6 +141,28 @@ class ExtentOverlay:
             return b""  # read past EOF: empty, like every other tier
         return None
 
+    def patch_range(self, base_window: bytes, offset: int,
+                    length: int) -> bytes:
+        """Assemble the value's ``[offset, offset+length)`` window given
+        the *base's* bytes for that window (already clamped at the
+        base's EOF — a short window means the base ends inside it).
+        Equivalent to ``apply_to(base)[offset:offset+length]`` without
+        ever materializing the full value — the ranged read path's
+        partial-overlay assembly."""
+        base_total = offset + len(base_window) \
+            if len(base_window) < length else offset + length
+        end = min(offset + length, max(base_total, self.end))
+        if end <= offset:
+            return b""
+        buf = bytearray(end - offset)
+        buf[:len(base_window)] = base_window[:end - offset]
+        for o, d in self._ext:
+            s = max(o, offset)
+            e = min(o + len(d), end)
+            if s < e:
+                buf[s - offset:e - offset] = d[s - o:e - o]
+        return bytes(buf)
+
     def apply_to(self, base: bytes) -> bytes:
         """Assemble the full value: extents patched over ``base``."""
         buf = bytearray(max(len(base), self.end))

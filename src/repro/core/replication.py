@@ -26,10 +26,11 @@ import os
 import threading
 from typing import List, Optional
 
-from repro.core.log import _WRITE_BUF  # shared append-buffer size
+from repro.core.log import _HDR, _WRITE_BUF  # wire header / buffer size
 from repro.core.extents import apply_range_write
 from repro.core.log import (Entry, affected_paths, decode_stream,
                             renames_touch)
+from repro.core.transport import next_rkey
 
 
 def _apply_to_table(table: dict, e: Entry) -> None:
@@ -71,6 +72,14 @@ class ReplicaSlot:
         self._seqnos: List[int] = []   # entry i -> seqno (bisect key)
         self.mirror = {}  # path -> bytes (latest, undigested)
         self._index = index if index is not None else {}
+        # path -> (byte offset into _buf, length) for mirror values that
+        # are plain full PUTs: a remote reader can one-sided-read them
+        # straight out of the slot region, no server work. Dropped the
+        # moment the mirror value stops being the raw needle bytes
+        # (range patch, delete, rename); rebuilt on truncation.
+        self._locs: dict = {}
+        self.rkey = next_rkey()  # one-sided region key (see transport)
+        self.region_id: Optional[str] = None  # set at registration
         self.acked_seqno = 0
         self.digested_seqno = 0
         # serializes appends (chain writes) against truncation (digest
@@ -100,8 +109,8 @@ class ReplicaSlot:
             self.entries.append(e)
             self._offsets.append(off)
             self._seqnos.append(e.seqno)
+            self._apply(e, off)
             off += e.nbytes
-            self._apply(e)
         if new:
             self.acked_seqno = new[-1].seqno
 
@@ -114,20 +123,40 @@ class ReplicaSlot:
         if self._index.get(path) is self:
             del self._index[path]
 
-    def _apply(self, e: Entry) -> None:
+    def _apply(self, e: Entry, off: Optional[int] = None) -> None:
         from repro.core import log as L
         if e.op == L.OP_PUT:
             self._mirror_set(e.path, e.data)
+            if off is not None:
+                self._locs[e.path] = (
+                    off + _HDR.size + len(e.path.encode()), len(e.data))
+            else:
+                self._locs.pop(e.path, None)
         elif e.op == L.OP_DELETE:
             self._mirror_set(e.path, None)  # tombstone
+            self._locs.pop(e.path, None)
         elif e.op == L.OP_WRITE:
             apply_range_write(self.mirror, e.path, e.offset, e.data)
             self._index[e.path] = self
+            self._locs.pop(e.path, None)  # mirror != raw needle bytes now
         elif e.op == L.OP_RENAME:
             val = self.mirror.get(e.path)
             self._mirror_set(e.path, None)  # tombstone first: self-rename safe
+            self._locs.pop(e.path, None)
+            self._locs.pop(e.data.decode(), None)
             if val is not None:
                 self._mirror_set(e.data.decode(), val)
+
+    def locate(self, path: str) -> Optional[tuple]:
+        """(buf offset, length, rkey) of the path's full value when it
+        is a plain PUT needle in the slot buffer — one-sided readable.
+        The rkey is captured under the slot lock so the triple is
+        internally consistent even if a truncation lands right after."""
+        with self._lock:
+            loc = self._locs.get(path)
+            if loc is None:
+                return None
+            return (loc[0], loc[1], self.rkey)
 
     # transport sink interface -------------------------------------------------
     def write(self, offset: Optional[int], data: bytes) -> None:
@@ -142,7 +171,12 @@ class ReplicaSlot:
             self._ingest(decode_stream(data), start)
 
     def read(self, offset: int, size: int) -> bytes:
-        return bytes(self._buf[offset: offset + size])
+        # locked: a concurrent truncation reshapes _buf, and a one-sided
+        # read must see either the pre- or post-truncate buffer whole
+        # (the transport's after-read rkey check then rejects the
+        # post-truncate case)
+        with self._lock:
+            return bytes(self._buf[offset: offset + size])
 
     def _idx_after(self, seqno: int) -> int:
         return bisect.bisect_right(self._seqnos, seqno)
@@ -166,7 +200,24 @@ class ReplicaSlot:
         self.entries = self.entries[i:]
         self._offsets = [o - cut for o in self._offsets[i:]]
         self._seqnos = self._seqnos[i:]
+        # the slot region's memory is about to be reused (offsets
+        # shift): invalidate outstanding one-sided handles FIRST — a
+        # racing reader that validated against the old key must fail
+        # its after-read check, never see the shifted buffer as valid
+        self.rkey = next_rkey()
         self._buf = self._buf[cut:]
+        # rebuild the plain-value location map over the survivors
+        self._locs.clear()
+        from repro.core import log as L
+        for e, off in zip(self.entries, self._offsets):
+            if e.op == L.OP_PUT:
+                self._locs[e.path] = (
+                    off + _HDR.size + len(e.path.encode()), len(e.data))
+            elif e.op in (L.OP_DELETE, L.OP_WRITE):
+                self._locs.pop(e.path, None)
+            elif e.op == L.OP_RENAME:
+                self._locs.pop(e.path, None)
+                self._locs.pop(e.data.decode(), None)
         self.digested_seqno = max(self.digested_seqno, seqno)
         self._f.flush()
         self._f.close()

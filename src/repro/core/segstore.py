@@ -46,6 +46,8 @@ import time
 import zlib
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.transport import next_rkey
+
 NEEDLE_MAGIC = 0xA551_6E0D
 N_PUT = 1
 N_DELETE = 2
@@ -61,6 +63,17 @@ _NOFF = struct.Struct("<Q")
 _WRITE_BUF = 1 << 20
 
 _SEG_FMT = "seg-%08d.log"
+
+# One flat "physical address space" over all segment files, so a remote
+# peer can one-sided-read any located extent with a single integer
+# address: addr = segment_id << _SEG_SHIFT | byte_offset. 2^40 bytes per
+# segment is far above any configured segment_bytes.
+_SEG_SHIFT = 40
+_SEG_MASK = (1 << _SEG_SHIFT) - 1
+
+
+def phys_addr(seg_id: int, off: int) -> int:
+    return (seg_id << _SEG_SHIFT) | off
 
 
 class _PatchChain:
@@ -106,6 +119,10 @@ class SegmentStore:
         self.disk_bytes = 0   # total appended needle bytes on disk
         self.dead_bytes = 0   # needle bytes superseded by overwrite/delete
         self.compactions = 0
+        # one-sided region key: located extents stay byte-stable until
+        # compaction reuses segment files, which bumps the key and
+        # invalidates every outstanding handle (StaleHandle on read)
+        self.rkey = next_rkey()
         self._read_fds: Dict[int, int] = {}  # segment_id -> O_RDONLY fd
         self._active_id = 0
         self._active = None
@@ -343,6 +360,60 @@ class SegmentStore:
             full = self._assemble(loc)
             return full[offset:offset + length]
 
+    def locate(self, path: str, offset: int = 0,
+               length: Optional[int] = None):
+        """Resolve a byte range to its physical extent without reading
+        it: ``("loc", addr, n, total, rkey)`` when a single needle
+        covers the (clamped) range contiguously — the caller can then
+        serve it with a one-sided region read of exactly ``n`` bytes at
+        ``addr`` — ``("frag", total)`` when the path exists but the
+        range needs patch-chain assembly (or is a zero hole with no
+        disk bytes), and ``None`` when the path is absent.
+        ``length=None`` means through end-of-value. The rkey is
+        captured under the store lock, so the (addr, rkey) pair is
+        internally consistent even when a compaction lands right after
+        locate returns — the stale pair then fails the transport's
+        rkey check instead of reading rewritten segments."""
+        with self._lock:
+            loc = self.index.get(path)
+            if loc is None:
+                return None
+            self.lru[path] = time.monotonic()
+            if isinstance(loc, _PatchChain):
+                total = loc.length
+                if offset >= total:
+                    return ("loc", 0, 0, total, self.rkey)
+                n = total - offset if length is None \
+                    else min(length, total - offset)
+                for boff, seg_id, voff, vlen in reversed(loc.patches):
+                    if boff <= offset and offset + n <= boff + vlen:
+                        return ("loc",
+                                phys_addr(seg_id, voff + offset - boff),
+                                n, total, self.rkey)
+                    if boff < offset + n and offset < boff + vlen:
+                        return ("frag", total)
+                base = loc.base
+                if base is not None and offset + n <= base[2]:
+                    return ("loc", phys_addr(base[0], base[1] + offset),
+                            n, total, self.rkey)
+                return ("frag", total)
+            seg_id, voff, vlen = loc
+            if offset >= vlen:
+                return ("loc", 0, 0, vlen, self.rkey)
+            n = vlen - offset if length is None \
+                else min(length, vlen - offset)
+            return ("loc", phys_addr(seg_id, voff + offset), n, vlen,
+                    self.rkey)
+
+    def read(self, addr: int, size: int) -> bytes:
+        """One-sided region read (transport sink interface) at a
+        physical address handed out by ``locate``."""
+        if size == 0:
+            return b""
+        with self._lock:
+            return self._read_at(addr >> _SEG_SHIFT, addr & _SEG_MASK,
+                                 size)
+
     def _assemble(self, ch: _PatchChain) -> bytes:
         """Latest-wins assembly of a patch chain (zeros-filled base)."""
         buf = bytearray(ch.length)
@@ -441,6 +512,11 @@ class SegmentStore:
             self._do_compact()
 
     def _do_compact(self) -> None:
+        # invalidate outstanding one-sided handles up front: segment
+        # files are about to be rewritten and unlinked, and a reader
+        # that resolved before this point must fail its rkey check
+        # rather than read recycled bytes
+        self.rkey = next_rkey()
         self.commit()
         old_ids = self._seg_ids()
         self._active.close()

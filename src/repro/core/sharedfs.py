@@ -54,7 +54,13 @@ class SharedFS:
         self.permissions: Dict[str, tuple] = {}  # prefix -> (read, write)
         self.recovered_epoch = 0
         self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
-                      "invalidated": 0, "bg_jobs": 0}
+                      "remote_locates": 0, "invalidated": 0, "bg_jobs": 0}
+        # persistent areas are one-sided readable: a remote LibFS
+        # resolves a (path, range) to a physical extent via locate(),
+        # then pulls exactly those bytes with Transport.one_sided_read —
+        # no per-read server-side work, no whole-blob transfer
+        transport.register_region(node_id, "area/hot", self.hot)
+        transport.register_region(node_id, "area/cold", self.cold)
         # background digest worker (paper §3.1: SharedFS digests sealed
         # log regions while LibFS keeps appending). One thread per node
         # daemon, started lazily; all digest application — background or
@@ -131,8 +137,9 @@ class SharedFS:
             slot = ReplicaSlot(os.path.join(self.root, "nvm", "repl",
                                             f"{proc_id}.log"),
                                self.fsync_data, index=self.slot_index)
+            slot.region_id = f"slot/{proc_id}"
             self.slots[proc_id] = slot
-            self.transport.register_region(self.node_id, f"slot/{proc_id}",
+            self.transport.register_region(self.node_id, slot.region_id,
                                            slot)
         return self.slots[proc_id]
 
@@ -341,6 +348,124 @@ class SharedFS:
     def read_remote(self, path: str) -> Tuple[bool, Optional[bytes]]:
         self.stats["remote_reads"] += 1
         return self.read_any(path, fetch_base=False)
+
+    def read_range(self, path: str, offset: int, length: int,
+                   fetch_base: bool = True) -> Tuple[bool, Optional[bytes]]:
+        """Node-local ranged read with ``read_any``'s tier order and
+        tombstone semantics, but touching only the requested bytes:
+        slot-mirror overlays serve covered ranges without a base, plain
+        mirror values slice in memory, and the hot/cold areas answer
+        with a single ``pread`` of the range (never a whole-value
+        materialization). Equivalent to ``read_any(path)[offset:
+        offset+length]`` when found."""
+        slot = self.slot_index.get(path)
+        if slot is not None and path in slot.mirror:
+            v = slot.mirror[path]
+            if v is None:
+                return True, None  # tombstone: authoritative
+            if isinstance(v, ExtentOverlay):
+                r = v.read_range(offset, length)
+                if r is not None:
+                    return True, r
+                # overlay only partially covers the range: assemble the
+                # window over this node's lower-tier base (rare)
+                found, full = self.read_any(path, fetch_base=fetch_base)
+                if not found:
+                    return False, None
+                return True, (None if full is None
+                              else full[offset:offset + length])
+            if isinstance(v, bytearray):
+                return True, bytes(v[offset:offset + length])
+            return True, v[offset:offset + length]
+        r = self.hot.get_range(path, offset, length)
+        if r is not None:
+            return True, r
+        r = self.cold.get_range(path, offset, length)
+        if r is not None:
+            return True, r
+        return False, None
+
+    def read_remote_range(self, path: str, offset: int,
+                          length: int) -> Tuple[bool, Optional[bytes]]:
+        """RPC: ranged remote read (remote-serving mode — reports a miss
+        instead of fetching an absent base). The RPC fallback for
+        one-sided reads whose handle went stale mid-flight."""
+        self.stats["remote_reads"] += 1
+        return self.read_range(path, offset, length, fetch_base=False)
+
+    # -- one-sided read protocol (locate -> Transport.one_sided_read) --------
+    @staticmethod
+    def _inline_desc(full: bytes, offset: int, length: Optional[int]):
+        if length is None:
+            return ("inline", full[offset:], len(full))
+        return ("inline", full[offset:offset + length], len(full))
+
+    def _locate_one(self, path: str, offset: int, length: Optional[int]):
+        slot = self.slot_index.get(path)
+        if slot is not None and path in slot.mirror:
+            v = slot.mirror[path]
+            if v is None:
+                return ("tomb",)
+            if isinstance(v, ExtentOverlay):
+                if length is not None:
+                    r = v.read_range(offset, length)
+                    if r is not None:
+                        return ("inline", r, v.end)
+                # overlay needs this node's base: remote-serving mode
+                # must not fetch one, so either answer from local tiers
+                # or report a miss and let the caller keep walking
+                found, full = self.read_any(path, fetch_base=False)
+                if not found:
+                    return ("miss",)
+                if full is None:
+                    return ("tomb",)
+                return self._inline_desc(full, offset, length)
+            if isinstance(v, bytearray):
+                return self._inline_desc(bytes(v), offset, length)
+            loc = slot.locate(path)
+            if loc is not None and slot.region_id is not None:
+                boff, n, rkey = loc
+                lo = min(offset, n)
+                ln = (n - lo) if length is None else min(length, n - lo)
+                return ("val", slot.region_id, boff + lo, ln, n, rkey)
+            return self._inline_desc(v, offset, length)
+        for area, rid in ((self.hot, "area/hot"), (self.cold, "area/cold")):
+            d = area.locate(path, offset, length)
+            if d is None:
+                continue
+            if d[0] == "loc":
+                _, addr, n, total, rkey = d
+                return ("val", rid, addr, n, total, rkey)
+            total = d[1]  # fragmented (patch chain): range-assemble here
+            ln = max(0, total - offset) if length is None else length
+            data = area.get_range(path, offset, ln)
+            return ("inline", data if data is not None else b"", total)
+        return ("miss",)
+
+    def locate(self, path: str, offset: int = 0,
+               length: Optional[int] = None):
+        """RPC: resolve a read to a one-sided-readable descriptor.
+
+        Returns one of
+          ``("val", region_id, off, n, total, rkey)`` — the caller pulls
+            ``n`` bytes at ``off`` from the region with
+            ``Transport.one_sided_read`` (rkey-guarded);
+          ``("inline", bytes, total)`` — the *ranged* bytes, answered
+            inline because no single physical extent covers them
+            (overlay/patch-chain assembly, zero holes);
+          ``("tomb",)`` — tombstone: found-deleted, authoritative;
+          ``("miss",)`` — not on this node; keep walking.
+
+        Remote-serving mode throughout: never fetches an absent base
+        (see ``read_remote``)."""
+        self.stats["remote_locates"] += 1
+        return self._locate_one(path, offset, length)
+
+    def locate_batch(self, reqs: List[Tuple[str, int, Optional[int]]]):
+        """RPC: one round-trip resolving many reads (the multiget /
+        readahead path) — descriptors in request order."""
+        self.stats["remote_locates"] += 1
+        return [self._locate_one(p, off, ln) for p, off, ln in reqs]
 
     # -- leases -------------------------------------------------------------------
     def lease_acquire(self, holder: str, path: str, mode: str,

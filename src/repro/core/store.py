@@ -10,6 +10,15 @@ is logged/replicated/digested, and reads assemble latest-wins extents
 from the log overlay over whichever tier holds the base value.
 ``put`` remains the whole-value degenerate case.
 
+The read side is extent-granular too (paper §3.1, Fig. 2b): every tier
+serves exact ranges (``get_range``), the remote tier resolves a
+``locate`` handle once and then pulls just the requested bytes with an
+rkey-guarded one-sided read (no per-read server work, no whole-blob
+transfer), ``multiget``/``readahead`` batch cold-path resolution into
+one ``locate_batch`` RPC per peer per ``remote_batch`` paths, full
+misses park in a negative-lookup cache (epoch/lease invalidated), and
+the DRAM cache is a scan-resistant 2Q (see ``DramCache``).
+
 Crash-consistency modes (paper §3):
   pessimistic — fsync() chain-replicates synchronously; acked writes
                 survive any single chain-node loss.
@@ -37,43 +46,123 @@ from repro.core.leases import READ, WRITE, covers
 from repro.core.log import SealedRegion, UpdateLog
 from repro.core.replication import ChainClient
 from repro.core.sharedfs import SharedFS
+from repro.core.transport import StaleHandle
 
 
 class DramCache:
-    def __init__(self, capacity_bytes: int):
+    """Scan-resistant process DRAM read cache (2Q / segmented-LRU).
+
+    The seed cache was a plain LRU: one streaming scan (sort spill,
+    fileserver sweep) flushed the entire point-read working set, and a
+    single value larger than capacity evicted *everything* on ``put``.
+    This cache fixes both:
+
+    - two queues: new fills land in a **probationary** queue; only a
+      re-reference promotes to the **protected** queue (default 3/4 of
+      capacity). A scan's once-touched values churn through probation
+      and never displace the re-referenced working set.
+    - protected overflow **demotes** its LRU tail back to probation
+      (segmented LRU) rather than evicting outright — a demoted entry
+      gets one more chance before leaving DRAM.
+    - **admission filter**: a value larger than ``admit_frac`` of
+      capacity is refused outright (the tiers below serve it ranged);
+      refusing admission still drops any stale cached value under the
+      same path.
+    - hit/miss counting happens in exactly one place (``get``) so
+      callers never have to re-adjust counters (the old ``get_range``
+      recount hack).
+
+    ``policy="lru"`` restores the seed's single-queue admit-everything
+    behavior — the fig14 same-run comparison toggle.
+    """
+
+    def __init__(self, capacity_bytes: int, *, protected_frac: float = 0.75,
+                 admit_frac: float = 1 / 8, policy: str = "2q"):
+        assert policy in ("2q", "lru")
         self.capacity = capacity_bytes
-        self.data = OrderedDict()
+        self.policy = policy
+        self.protected_cap = int(capacity_bytes * protected_frac)
+        self.admit_limit = (int(capacity_bytes * admit_frac)
+                            if policy == "2q" else None)
+        self.probation = OrderedDict()
+        self.protected = OrderedDict()
         self.bytes = 0
+        self.protected_bytes = 0
         self.hits = 0
         self.misses = 0
+        self.admit_rejects = 0
+        self.promotions = 0
+        self.demotions = 0
+
+    def __contains__(self, path: str) -> bool:
+        return path in self.protected or path in self.probation
+
+    def paths(self):
+        return list(self.protected) + list(self.probation)
 
     def get(self, path: str) -> Optional[bytes]:
-        v = self.data.get(path)
+        v = self.protected.get(path)
         if v is not None:
-            self.data.move_to_end(path)
+            self.protected.move_to_end(path)
             self.hits += 1
-        else:
+            return v
+        v = self.probation.get(path)
+        if v is None:
             self.misses += 1
+            return None
+        self.hits += 1
+        if self.policy == "lru":
+            self.probation.move_to_end(path)
+            return v
+        # second reference: promote out of probation (2Q)
+        del self.probation[path]
+        self.protected[path] = v
+        self.protected_bytes += len(v)
+        self.promotions += 1
+        self._rebalance()
         return v
 
+    def _rebalance(self) -> None:
+        """Demote the protected LRU tail into probation MRU until the
+        protected queue fits its share of capacity."""
+        while self.protected_bytes > self.protected_cap \
+                and len(self.protected) > 1:
+            p, v = self.protected.popitem(last=False)
+            self.protected_bytes -= len(v)
+            self.probation[p] = v
+            self.demotions += 1
+
     def put(self, path: str, data: bytes) -> None:
-        old = self.data.pop(path, None)
-        if old is not None:
-            self.bytes -= len(old)
-        self.data[path] = data
+        self.invalidate(path)  # stale value must go even if not admitted
+        if self.admit_limit is not None and len(data) > self.admit_limit:
+            self.admit_rejects += 1
+            return
+        self.probation[path] = data
         self.bytes += len(data)
-        while self.bytes > self.capacity and self.data:
-            _, v = self.data.popitem(last=False)
+        while self.bytes > self.capacity:
+            if self.probation:
+                _, v = self.probation.popitem(last=False)
+            elif self.protected:
+                _, v = self.protected.popitem(last=False)
+                self.protected_bytes -= len(v)
+            else:
+                break
             self.bytes -= len(v)
 
     def invalidate(self, path: str) -> None:
-        v = self.data.pop(path, None)
+        v = self.probation.pop(path, None)
+        if v is None:
+            v = self.protected.pop(path, None)
+            if v is not None:
+                self.protected_bytes -= len(v)
         if v is not None:
             self.bytes -= len(v)
 
     def clear(self) -> None:
-        self.data.clear()
+        self.probation.clear()
+        self.protected.clear()
         self.bytes = 0
+        self.protected_bytes = 0
 
 
 class _DigestJob:
@@ -92,7 +181,8 @@ class LibState:
                  reserves: Optional[List[str]] = None, *,
                  mode: str = "pessimistic", log_capacity: int = 1 << 30,
                  dram_capacity: int = 2 << 30, subtree: str = "/",
-                 fsync_data: bool = False, pipeline_digests: bool = True):
+                 fsync_data: bool = False, pipeline_digests: bool = True,
+                 one_sided_reads: bool = True, remote_batch: int = 32):
         assert mode in ("pessimistic", "optimistic")
         self.proc_id = proc_id
         self.sfs = sharedfs
@@ -108,6 +198,24 @@ class LibState:
         self.chain = ChainClient(proc_id, peers, sharedfs.transport)
         self.reserves = [n for n in (reserves or [])
                          if n != sharedfs.node_id]
+        # remote read tier: reserves first (paper §3.5 — their NVM holds
+        # colder state by design), then chain replicas; deduped and
+        # never the local node (its tiers were already walked)
+        seen = set()
+        self.read_peers = [n for n in self.reserves + self.chain.chain
+                           if n != sharedfs.node_id
+                           and not (n in seen or seen.add(n))]
+        # one_sided_reads=False restores the pre-fig14 whole-blob
+        # read_remote RPC per peer (the same-run comparison toggle)
+        self.one_sided_reads = one_sided_reads
+        self.remote_batch = remote_batch
+        # negative-lookup cache: paths known absent below L1 at a given
+        # cluster epoch. An entry short-circuits the remote peer walk;
+        # it is dropped on any local mutation of the path, on any fresh
+        # (non-cached) lease grant covering it — a lease handoff is how
+        # another writer's new data becomes visible — on revocation, and
+        # implicitly by an epoch bump (membership change).
+        self._neg: Dict[str, int] = {}
         for n in peers:
             sharedfs.transport.rpc(n, "ensure_slot", proc_id)
         sharedfs.local_procs[proc_id] = self
@@ -125,6 +233,7 @@ class LibState:
         self._lease_cache: Dict[str, Tuple[str, float]] = {}
         self.stats = {"puts": 0, "range_writes": 0, "gets": 0,
                       "l1_hits": 0, "l2_hits": 0, "remote_hits": 0,
+                      "neg_hits": 0, "stale_handles": 0, "multigets": 0,
                       "digests": 0, "inline_digests": 0, "bg_digests": 0,
                       "seals": 0, "backpressure_waits": 0,
                       "seal_deferrals": 0,
@@ -148,6 +257,11 @@ class LibState:
             self.proc_id, path, mode, self.subtree)
         self._lease_cache[lpath] = (lmode, exp)
         self.stats["lease_acquires"] += 1
+        # a fresh grant may be a handoff from a writer whose flush just
+        # made this path appear below: cached negative lookups under the
+        # granted subtree are no longer trustworthy
+        for p in [p for p in self._neg if covers(lpath, p)]:
+            del self._neg[p]
 
     def lease_subtree(self, path: str) -> None:
         """Acquire an exclusive subtree (directory) lease — e.g. a
@@ -163,8 +277,11 @@ class LibState:
         for p in [p for p in self._lease_cache
                   if covers(p, path) or covers(path, p)]:
             del self._lease_cache[p]
-        for p in [p for p in self.dram.data if covers(path, p)]:
-            self.dram.invalidate(p)
+        for p in self.dram.paths():
+            if covers(path, p):
+                self.dram.invalidate(p)
+        for p in [p for p in self._neg if covers(path, p)]:
+            del self._neg[p]
         self.flush_for_revocation()
 
     # -- write path -------------------------------------------------------------
@@ -173,6 +290,7 @@ class LibState:
         self.log.append(L.OP_PUT, path, data)
         self.stats["puts"] += 1
         self.dram.invalidate(path)
+        self._neg.pop(path, None)
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
             self._threshold_digest()
 
@@ -184,6 +302,7 @@ class LibState:
         self.log.append(L.OP_WRITE, path, data, offset)
         self.stats["range_writes"] += 1
         self.dram.invalidate(path)
+        self._neg.pop(path, None)
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
             self._threshold_digest()
 
@@ -229,6 +348,8 @@ class LibState:
         self.log.append(L.OP_RENAME, src, dst.encode())
         self.dram.invalidate(src)
         self.dram.invalidate(dst)
+        self._neg.pop(src, None)
+        self._neg.pop(dst, None)
 
     def fsync(self) -> None:
         self.log.persist()
@@ -266,29 +387,77 @@ class LibState:
         v = self.log.index.get(path, self._MISS)  # L1a: log hashtable
         if v is not self._MISS:
             self.stats["l1_hits"] += 1
-            if isinstance(v, ExtentOverlay):
-                # extent assembly: undigested ranges over the base from
-                # the tiers below (zeros base after a local tombstone).
-                # The base is NOT dram-cached: it is stale the moment
-                # the overlay digests.
-                base = b"" if v.from_zero else (
-                    self._read_below(path, fill_cache=False) or b"")
-                return v.apply_to(base)
-            if isinstance(v, bytearray):  # in-place-patched: copy out
-                return bytes(v)
-            return v  # full value, or a tombstone (None): authoritative
+            return self._from_log_value(path, v)
         v = self.dram.get(path)  # L1b: process DRAM read cache
         if v is not None:
             self.stats["l1_hits"] += 1
             return v
         return self._read_below(path)
 
+    def _from_log_value(self, path: str, v) -> Optional[bytes]:
+        """Materialize a log-hashtable hit (caller counted the L1 hit)."""
+        if isinstance(v, ExtentOverlay):
+            # extent assembly: undigested ranges over the base from
+            # the tiers below (zeros base after a local tombstone).
+            # The base is NOT dram-cached: it is stale the moment
+            # the overlay digests.
+            base = b"" if v.from_zero else (
+                self._read_below(path, fill_cache=False) or b"")
+            return v.apply_to(base)
+        if isinstance(v, bytearray):  # in-place-patched: copy out
+            return bytes(v)
+        return v  # full value, or a tombstone (None): authoritative
+
+    def _remote_fetch(self, nid: str, path: str, offset: int = 0,
+                      length: Optional[int] = None):
+        """One remote read: locate + rkey-guarded one-sided read of
+        exactly the requested bytes (``length=None``: the whole value).
+        With ``one_sided_reads`` off this is the legacy whole-blob
+        ``read_remote`` RPC, sliced client-side."""
+        if not self.one_sided_reads:
+            found, v = self.transport.rpc(nid, "read_remote", path)
+            if not found or v is None or length is None:
+                return found, v
+            return True, v[offset:offset + length]
+        desc = self.transport.rpc(nid, "locate", path, offset, length)
+        return self._resolve_desc(nid, path, desc, offset, length)
+
+    def _resolve_desc(self, nid: str, path: str, desc, offset: int,
+                      length: Optional[int]):
+        """(found, value) from a locate descriptor (see
+        ``SharedFS.locate``); stale one-sided handles fall back to the
+        ranged read RPC."""
+        kind = desc[0]
+        if kind == "miss":
+            return False, None
+        if kind == "tomb":
+            return True, None
+        if kind == "inline":
+            return True, desc[1]
+        _, region, off, n, _total, rkey = desc
+        if n == 0:
+            return True, b""
+        try:
+            return True, self.transport.one_sided_read(nid, region, off,
+                                                       n, rkey=rkey)
+        except StaleHandle:
+            # region memory was reused between locate and read
+            # (compaction / slot truncation): re-read via RPC — still
+            # ranged, never a whole-blob fallback
+            self.stats["stale_handles"] += 1
+            if length is None:
+                return self.transport.rpc(nid, "read_remote", path)
+            return self.transport.rpc(nid, "read_remote_range", path,
+                                      offset, length)
+
     def _read_below(self, path: str,
                     fill_cache: bool = True) -> Optional[bytes]:
         """L2..L4: node-local SharedFS (slots, hot, cold), then remote
-        replica NVM. A *found* answer — including a tombstone — is
-        authoritative: deleted data must never resurrect from a colder
-        tier (see ``SharedFS.read_any``)."""
+        replica NVM via locate + one-sided read. A *found* answer —
+        including a tombstone — is authoritative: deleted data must
+        never resurrect from a colder tier (see ``SharedFS.read_any``).
+        A full miss is remembered in the negative-lookup cache until
+        the epoch changes or a lease event invalidates it."""
         found, v = self.sfs.read_any(path)  # L2: node-local SharedFS
         if found:
             if v is not None:
@@ -296,9 +465,12 @@ class LibState:
                 if fill_cache:
                     self.dram.put(path, v)
             return v
-        for nid in self.reserves + self.chain.chain:  # L3: remote NVM
+        if self._neg.get(path) == self.cluster.epoch:
+            self.stats["neg_hits"] += 1
+            return None
+        for nid in self.read_peers:  # L3: remote replica NVM
             try:
-                found, v = self.transport.rpc(nid, "read_remote", path)
+                found, v = self._remote_fetch(nid, path)
             except Exception:
                 continue
             if found:
@@ -307,33 +479,160 @@ class LibState:
                     if fill_cache:
                         self.dram.put(path, v)
                 return v
+        self._neg[path] = self.cluster.epoch
         return None
+
+    def _range_below(self, path: str, offset: int, length: int):
+        """(found, window) for ``[offset, offset+length)`` from the
+        tiers below L1, reading only the requested bytes at every tier
+        (local slot/hot/cold preads, then remote ranged one-sided
+        reads). Partial windows are NOT dram-cached."""
+        found, v = self.sfs.read_range(path, offset, length)
+        if found:
+            if v is not None:
+                self.stats["l2_hits"] += 1
+            return True, v
+        if self._neg.get(path) == self.cluster.epoch:
+            self.stats["neg_hits"] += 1
+            return False, None
+        for nid in self.read_peers:
+            try:
+                found, v = self._remote_fetch(nid, path, offset, length)
+            except Exception:
+                continue
+            if found:
+                if v is not None:
+                    self.stats["remote_hits"] += 1
+                return True, v
+        self._neg[path] = self.cluster.epoch
+        return False, None
 
     def get_range(self, path: str, offset: int,
                   length: int) -> Optional[bytes]:
-        """Exact-range read. When the value lives (only) in the hot
-        area this is one ``os.pread`` of just the requested bytes; an
-        undigested overlay that fully covers the range is served from
-        the log without touching the base at all."""
+        """Exact-range read through *every* tier: a covering log
+        overlay never touches the base, a partial overlay assembles
+        over a ranged base window (not the whole value), local areas
+        answer with one ``pread`` of the range, and a remote miss pulls
+        just the range one-sided. Equivalent to
+        ``get(path)[offset:offset+length]``."""
         self._lease(path, READ)
         self.stats["gets"] += 1
         v = self.log.index.get(path, self._MISS)
-        if isinstance(v, ExtentOverlay):
-            r = v.read_range(offset, length)
-            if r is not None:
+        if v is not self._MISS:
+            self.stats["l1_hits"] += 1
+            if isinstance(v, ExtentOverlay):
+                r = v.read_range(offset, length)
+                if r is not None:
+                    return r
+                base = b""
+                if not v.from_zero:
+                    _, win = self._range_below(path, offset, length)
+                    base = win or b""
+                return v.patch_range(base, offset, length)
+            if v is None:
+                return None  # tombstone: authoritative
+            full = bytes(v) if isinstance(v, bytearray) else v
+            return full[offset:offset + length]
+        v = self.dram.get(path)
+        if v is not None:
+            self.stats["l1_hits"] += 1
+            return v[offset:offset + length]
+        found, win = self._range_below(path, offset, length)
+        return win if found else None
+
+    # -- batched reads ---------------------------------------------------------
+    def multiget(self, paths: List[str]) -> Dict[str, Optional[bytes]]:
+        """Read many paths with batched remote resolution: local tiers
+        are walked per path (dict probes / preads), then all misses are
+        resolved against each peer with ONE ``locate_batch`` RPC per
+        ``remote_batch`` paths and grouped one-sided reads — N cold
+        keys cost ``ceil(N / remote_batch)`` locate round-trips per
+        peer instead of N. Result is keyed by path and equivalent to
+        ``{p: get(p) for p in paths}`` (duplicates are read — and
+        counted — once)."""
+        out: Dict[str, Optional[bytes]] = {}
+        misses: List[str] = []
+        seen = set()
+        for p in paths:
+            if p in seen:
+                continue
+            seen.add(p)
+            self._lease(p, READ)
+            self.stats["gets"] += 1
+            v = self.log.index.get(p, self._MISS)
+            if v is not self._MISS:
                 self.stats["l1_hits"] += 1
-                return r
-        elif v is self._MISS:
-            v = self.dram.get(path)  # counts hit/miss, bumps LRU
+                out[p] = self._from_log_value(p, v)
+                continue
+            v = self.dram.get(p)
             if v is not None:
                 self.stats["l1_hits"] += 1
-                return v[offset:offset + length]
-            if not self.sfs.in_slot(path) and self.sfs.hot.contains(path):
-                self.stats["l2_hits"] += 1
-                return self.sfs.hot.get_range(path, offset, length)
-        self.stats["gets"] -= 1  # the fallback get() recounts
-        full = self.get(path)
-        return None if full is None else full[offset:offset + length]
+                out[p] = v
+                continue
+            found, v = self.sfs.read_any(p)
+            if found:
+                if v is not None:
+                    self.stats["l2_hits"] += 1
+                    self.dram.put(p, v)
+                out[p] = v
+                continue
+            if self._neg.get(p) == self.cluster.epoch:
+                self.stats["neg_hits"] += 1
+                out[p] = None
+                continue
+            misses.append(p)
+        if misses:
+            self.stats["multigets"] += 1
+            remaining = misses
+            for nid in self.read_peers:
+                if not remaining:
+                    break
+                remaining = self._multiget_peer(nid, remaining, out)
+            for p in remaining:  # absent everywhere: remember the miss
+                out[p] = None
+                self._neg[p] = self.cluster.epoch
+        return {p: out[p] for p in paths}
+
+    def _multiget_peer(self, nid: str, paths: List[str],
+                       out: Dict[str, Optional[bytes]]) -> List[str]:
+        """Resolve ``paths`` against one peer; returns the still-missing
+        suffix for the next peer. Tombstones are authoritative."""
+        still: List[str] = []
+        for i in range(0, len(paths), self.remote_batch):
+            chunk = paths[i:i + self.remote_batch]
+            try:
+                if self.one_sided_reads:
+                    descs = self.transport.rpc(
+                        nid, "locate_batch", [(p, 0, None) for p in chunk])
+                else:
+                    descs = None  # legacy: per-path whole-blob RPC
+            except Exception:
+                still.extend(chunk)
+                continue
+            for j, p in enumerate(chunk):
+                try:
+                    if descs is None:
+                        found, v = self.transport.rpc(nid, "read_remote", p)
+                    else:
+                        found, v = self._resolve_desc(nid, p, descs[j],
+                                                      0, None)
+                except Exception:
+                    still.append(p)
+                    continue
+                if not found:
+                    still.append(p)
+                    continue
+                out[p] = v
+                if v is not None:
+                    self.stats["remote_hits"] += 1
+                    self.dram.put(p, v)
+        return still
+
+    def readahead(self, paths: List[str]) -> int:
+        """Batch-prefetch into the DRAM cache (probationary queue);
+        returns how many paths resolved to a value."""
+        return sum(1 for v in self.multiget(paths).values()
+                   if v is not None)
 
     # -- digest pipeline (seal -> background replicate+apply+fanout -> reap) -----
     def seal_and_digest(self) -> None:

@@ -5,22 +5,47 @@ preserves the *semantics* Assise relies on:
 
 - **ordered one-sided writes** into registered remote memory regions
   (RDMA RC ordering — what CC-NVM's prefix guarantee builds on),
+- **one-sided reads** out of registered regions, guarded by an ``rkey``:
+  a region's owner bumps its key whenever it reuses the underlying
+  memory (segment compaction, slot truncation), and a read presenting a
+  stale key raises ``StaleHandle`` — exactly the remote-access error a
+  real NIC returns for an invalidated memory registration, so a reader
+  holding an old locate handle fails loudly instead of reading
+  recycled bytes,
 - **RPCs** that invoke a remote endpoint method,
 - failure injection: a dead node's endpoints raise ``NodeDown``,
-- full accounting (ops, bytes, hops) so benchmarks can report both the
-  measured Python time and a modeled wire time
-  (``bytes / NET_BW + hops * NET_LAT``) — see benchmarks/common.py.
+- full accounting (ops, bytes, hops — response payloads included) so
+  benchmarks can report both the measured Python time and a modeled
+  wire time (``bytes / NET_BW + hops * NET_LAT``) — see
+  benchmarks/common.py.
 
 Swapping this class for a real ICI/DCN transport changes no caller code.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from dataclasses import dataclass, field
 
 
 class NodeDown(RuntimeError):
     pass
+
+
+class StaleHandle(RuntimeError):
+    """One-sided access with an invalidated rkey (remote memory was
+    reused since the handle was resolved)."""
+
+
+# Globally unique rkey generator: region owners take a fresh key at
+# construction and at every memory-reuse point, so a handle resolved
+# against a *previous incarnation* of a region (e.g. a SharedFS rebuilt
+# on node restart) can never validate by accident.
+_RKEYS = itertools.count(1)
+
+
+def next_rkey() -> int:
+    return next(_RKEYS)
 
 
 # Modeled wire constants (Table 1: NVM-RDMA): 3us read / 8us write RPC,
@@ -30,30 +55,55 @@ NET_LAT_WRITE_S = 8e-6
 NET_BW_BPS = 3.8e9
 
 
+def payload_bytes(x) -> int:
+    """Wire payload bytes inside an RPC argument/return value (bytes
+    nested one or two levels deep in tuples/lists count too — e.g. a
+    ``(found, value)`` read reply or a batch of locate descriptors)."""
+    if isinstance(x, (bytes, bytearray)):
+        return len(x)
+    if isinstance(x, (tuple, list)):
+        return sum(payload_bytes(v) for v in x)
+    return 0
+
+
 @dataclass
 class TransportStats:
     rpcs: int = 0
     one_sided_writes: int = 0
+    one_sided_reads: int = 0
     bytes_sent: int = 0
     bytes_read: int = 0
+    rpc_resp_bytes: int = 0
     per_node: dict = field(default_factory=dict)
 
     def account(self, dst, nbytes, kind):
         e = self.per_node.setdefault(dst, {"rpcs": 0, "writes": 0,
-                                           "bytes": 0})
+                                           "reads": 0, "bytes": 0})
         e["bytes"] += nbytes
         if kind == "rpc":
             self.rpcs += 1
             e["rpcs"] += 1
+        elif kind == "read":
+            self.one_sided_reads += 1
+            e["reads"] += 1
         else:
             self.one_sided_writes += 1
             e["writes"] += 1
         self.bytes_sent += nbytes
 
+    def respond(self, dst, nbytes):
+        """RPC response payload: crosses the wire but is not a hop."""
+        self.rpc_resp_bytes += nbytes
+        self.bytes_sent += nbytes
+        e = self.per_node.setdefault(dst, {"rpcs": 0, "writes": 0,
+                                           "reads": 0, "bytes": 0})
+        e["bytes"] += nbytes
+
     def modeled_wire_s(self) -> float:
         return (self.bytes_sent / NET_BW_BPS
                 + self.rpcs * NET_LAT_WRITE_S
-                + self.one_sided_writes * NET_LAT_WRITE_S)
+                + self.one_sided_writes * NET_LAT_WRITE_S
+                + self.one_sided_reads * NET_LAT_READ_S)
 
 
 class Transport:
@@ -91,10 +141,13 @@ class Transport:
     # -- RPC ---------------------------------------------------------------
     def rpc(self, dst: str, method: str, *args, **kwargs):
         self._check(dst)
-        nbytes = sum(len(a) for a in args if isinstance(a, (bytes,
-                                                            bytearray)))
+        nbytes = sum(payload_bytes(a) for a in args)
         self.stats.account(dst, nbytes + 64, "rpc")  # 64B header model
-        return getattr(self._endpoints[dst], method)(*args, **kwargs)
+        result = getattr(self._endpoints[dst], method)(*args, **kwargs)
+        resp = payload_bytes(result)
+        if resp:
+            self.stats.respond(dst, resp)
+        return result
 
     # -- one-sided writes (RDMA WRITE semantics; ordered per (src,dst)) ----
     def register_region(self, node_id: str, region_id: str, sink) -> None:
@@ -111,9 +164,33 @@ class Transport:
         sink.write(offset, data)
 
     def one_sided_read(self, dst: str, region_id: str, offset: int,
-                       size: int) -> bytes:
+                       size: int, rkey: int = None) -> bytes:
+        """RDMA READ: pull bytes out of a registered region with zero
+        server-side work. ``rkey``, when given, must match the region
+        sink's current key — a mismatch means the remote memory was
+        reused (compaction/truncation) since the handle was resolved
+        and raises ``StaleHandle`` instead of returning recycled bytes.
+        The key is validated *again after* the read (optimistic
+        concurrency): a reuse that raced the read invalidates its
+        result, so a torn check-then-read window can never hand back
+        recycled bytes as the value."""
         self._check(dst)
         sink = self._regions.get((dst, region_id))
+        if sink is None:
+            raise KeyError(f"region {region_id} not registered on {dst}")
+        if rkey is not None and getattr(sink, "rkey", None) != rkey:
+            raise StaleHandle(f"{region_id}@{dst} rkey={rkey}")
         self.stats.bytes_read += size
-        self.stats.account(dst, 64, "rpc")
-        return sink.read(offset, size)
+        self.stats.account(dst, size, "read")
+        try:
+            data = sink.read(offset, size)
+        except Exception:
+            if rkey is not None and getattr(sink, "rkey", None) != rkey:
+                # the read faulted because the memory went away mid-
+                # flight (e.g. compaction unlinked a segment file):
+                # that IS the stale-handle error, surface it as such
+                raise StaleHandle(f"{region_id}@{dst} rkey={rkey}")
+            raise
+        if rkey is not None and getattr(sink, "rkey", None) != rkey:
+            raise StaleHandle(f"{region_id}@{dst} rkey={rkey}")
+        return data

@@ -142,6 +142,20 @@ class DisaggClient:
         self._cache_put(path, v)
         return v[:size]
 
+    def get_range(self, path: str, offset: int,
+                  length: int) -> Optional[bytes]:
+        """Ranged read through a block cache: a miss fetches the WHOLE
+        object from the server (kernel readahead/block granularity — the
+        wire amplification Assise's locate + one-sided range read
+        avoids), then slices locally."""
+        full = self.get(path)
+        return None if full is None else full[offset:offset + length]
+
+    def multiget(self, paths: List[str]):
+        """No batched server surface: one lookup+fetch round-trip pair
+        per cold path."""
+        return {p: self.get(p) for p in paths}
+
     def rename(self, src: str, dst: str) -> None:
         self.fsync()
         self.c.transport.rpc(self.c.mds.node_id, "rename", src, dst)

@@ -1,4 +1,4 @@
-"""Hypothesis property test for extent-granularity IO (ISSUE 2).
+"""Hypothesis property test for extent-granularity IO (ISSUE 2 + 4).
 
 Random interleavings of range writes / puts / deletes / renames /
 digests / fsyncs / process crashes driven through a real AssiseCluster
@@ -6,6 +6,14 @@ must keep **read-your-writes** equal to a flat dict-of-bytearrays
 model at every step and at the end. The model is deliberately naive
 (no extents, no tiers): whole values in memory, range writes splice
 with zero-filled holes, rename moves, delete drops.
+
+A second *reader* process on the other chain node interleaves remote
+reads (whole-value, ranged, multiget) and cache evictions: every
+remote answer arrives through the locate + one-sided read protocol
+(slot mirrors, hot-area extents, negative-lookup cache, lease
+revocation handoffs) and must match the same flat model — in
+particular, tombstones must never resurrect through the one-sided
+path, and ``multiget`` must be equivalent to sequential ``get``s.
 """
 import pytest
 
@@ -28,6 +36,13 @@ _ops = st.one_of(
     # seal at a random point: the digest pipeline's background worker
     # digests the sealed region while subsequent ops keep running
     st.tuples(st.just("seal"), st.none(), st.none()),
+    # remote read-tier ops (driven through the reader process)
+    st.tuples(st.just("rget"), _paths, st.none()),
+    st.tuples(st.just("rrange"), _paths,
+              st.tuples(st.integers(min_value=0, max_value=90),
+                        st.integers(min_value=1, max_value=40))),
+    st.tuples(st.just("mget"), st.none(), st.none()),
+    st.tuples(st.just("evict"), st.none(), st.none()),
 )
 
 
@@ -50,14 +65,26 @@ def _model_apply(model, kind, a, b):
             model[b] = model.pop(a)
 
 
+_ALL_PATHS = ["/a", "/b", "/c/d"]
+
+
 @settings(max_examples=20, deadline=None)
 @given(ops=st.lists(_ops, min_size=1, max_size=25))
 def test_extent_interleavings_match_flat_model(tmp_path_factory, ops):
     root = tmp_path_factory.mktemp("excl")
     c = AssiseCluster(str(root / "c"), n_nodes=2, replication=2)
     ls = c.open_process("p", "node0")
+    # reader on the other chain node: its sub-L1 reads cross the wire
+    # (slot mirrors / hot extents via locate + one-sided read); writes
+    # become visible to it through lease-revocation flushes
+    reader = c.open_process("q", "node1")
     model = {}
     touched = set()
+
+    def expect(p):
+        want = model.get(p)
+        return bytes(want) if want is not None else None
+
     try:
         for kind, a, b in ops:
             if kind == "put":
@@ -78,18 +105,31 @@ def test_extent_interleavings_match_flat_model(tmp_path_factory, ops):
                 ls.log.persist()
                 c.kill_process(ls)
                 ls = c.recover_process_local("p", "node0")
+            elif kind == "rget":
+                assert reader.get(a) == expect(a), ("rget", a)
+            elif kind == "rrange":
+                off, ln = b
+                want = expect(a)
+                want = None if want is None else want[off:off + ln]
+                assert reader.get_range(a, off, ln) == want, \
+                    ("rrange", a, b)
+            elif kind == "mget":
+                got = reader.multiget(_ALL_PATHS)
+                for p in _ALL_PATHS:  # multiget ≡ sequential gets
+                    assert got[p] == expect(p), ("mget", p)
+            elif kind == "evict":
+                reader.dram.clear()
+                ls.dram.clear()
             _model_apply(model, kind, a, b)
-            if a:
+            if a and kind in ("put", "write", "delete", "rename"):
                 touched.add(a)
                 if kind == "rename":
                     touched.add(b)
                 # read-your-writes after every mutation
-                want = model.get(a)
                 got = ls.get(a)
-                assert got == (bytes(want) if want is not None else None), \
-                    (kind, a, b)
-        for p in touched:  # final full-state equivalence
-            want = model.get(p)
-            assert ls.get(p) == (bytes(want) if want is not None else None)
+                assert got == expect(a), (kind, a, b)
+        for p in touched:  # final full-state equivalence, both processes
+            assert ls.get(p) == expect(p)
+            assert reader.get(p) == expect(p)
     finally:
         c.close()

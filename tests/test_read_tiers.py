@@ -1,0 +1,318 @@
+"""Zero-copy remote read tier (ISSUE 4): locate + one-sided ranged
+reads, batched multiget, negative-lookup cache, scan-resistant 2Q DRAM
+cache, and stale-handle (rkey) fallback."""
+import pytest
+
+from repro.core import AssiseCluster
+from repro.core.extents import ExtentOverlay
+from repro.core.segstore import SegmentStore
+from repro.core.store import DramCache
+from repro.core.transport import StaleHandle
+
+
+# -- DramCache (2Q / segmented LRU) -----------------------------------------
+
+
+def test_dram_cache_scan_resistance():
+    c = DramCache(16 * 1024)
+    for i in range(4):  # working set: 4 x 1KB, referenced twice
+        c.put(f"/ws/{i}", bytes([i]) * 1024)
+    for i in range(4):
+        assert c.get(f"/ws/{i}") is not None  # promote to protected
+    for i in range(64):  # streaming scan: once-touched 1KB values
+        c.put(f"/scan/{i}", b"s" * 1024)
+    for i in range(4):  # the scan churned probation, not the point set
+        assert c.get(f"/ws/{i}") == bytes([i]) * 1024
+    assert c.bytes <= c.capacity
+
+
+def test_dram_cache_lru_policy_is_scan_vulnerable():
+    c = DramCache(16 * 1024, policy="lru")
+    for i in range(4):
+        c.put(f"/ws/{i}", bytes([i]) * 1024)
+        c.get(f"/ws/{i}")
+    for i in range(64):
+        c.put(f"/scan/{i}", b"s" * 1024)
+    assert all(c.get(f"/ws/{i}") is None for i in range(4))
+
+
+def test_dram_cache_admission_filter():
+    c = DramCache(8 * 1024)  # admit limit = 1KB
+    c.put("/a", b"a" * 512)
+    c.get("/a")
+    c.put("/big", b"B" * 4096)  # > capacity/8: refused, cache untouched
+    assert c.admit_rejects == 1
+    assert c.get("/big") is None
+    assert c.get("/a") == b"a" * 512
+    # refusing admission still drops the stale cached value
+    c.put("/a", b"A" * 4096)
+    assert c.get("/a") is None
+    assert c.bytes == 0
+
+
+def test_dram_cache_protected_overflow_demotes():
+    c = DramCache(8 * 1024, protected_frac=0.5)
+    for i in range(8):
+        c.put(f"/p/{i}", b"x" * 1024)
+        c.get(f"/p/{i}")  # promote each
+    assert c.demotions > 0
+    assert c.protected_bytes <= c.protected_cap
+    assert c.bytes <= c.capacity
+
+
+def test_dram_cache_invalidate_and_paths():
+    c = DramCache(8 * 1024)
+    c.put("/a", b"1")
+    c.put("/b", b"2")
+    c.get("/a")  # /a protected, /b probation
+    assert sorted(c.paths()) == ["/a", "/b"]
+    assert "/a" in c and "/b" in c
+    c.invalidate("/a")
+    c.invalidate("/b")
+    assert c.bytes == 0 and c.paths() == []
+
+
+def test_get_counts_once_per_op(tmp_cluster):
+    """No recount hack: every get/get_range bumps ``gets`` exactly once
+    regardless of which tier answers."""
+    ls = tmp_cluster.open_process("p1")
+    ls.put("/cnt/x", bytes(range(200)))
+    base = ls.stats["gets"]
+    ls.get("/cnt/x")                    # L1 log
+    ls.get_range("/cnt/x", 5, 10)       # L1 log, sliced
+    ls.digest()
+    ls.get_range("/cnt/x", 5, 10)       # L2 hot pread
+    ls.get("/cnt/x")                    # L2 -> dram fill
+    ls.get("/cnt/x")                    # dram hit
+    ls.get("/cnt/missing")              # full miss
+    assert ls.stats["gets"] == base + 6
+
+
+# -- SegmentStore.locate / one-sided region reads ----------------------------
+
+
+def test_segstore_locate_and_phys_read(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"))
+    val = bytes(range(256))
+    s.put("/x", val)
+    kind, addr, n, total, rkey = s.locate("/x")
+    assert (kind, n, total, rkey) == ("loc", 256, 256, s.rkey)
+    assert s.read(addr, n) == val
+    kind, addr, n, total, _ = s.locate("/x", 10, 20)
+    assert (kind, n, total) == ("loc", 20, 256)
+    assert s.read(addr, n) == val[10:30]
+    kind, _, n, total, _ = s.locate("/x", 250, 20)  # clamped at EOF
+    assert (kind, n, total) == ("loc", 6, 256)
+    assert s.locate("/x", 300, 4)[:4] == ("loc", 0, 0, 256)  # past EOF
+    assert s.locate("/nope") is None
+    s.close()
+
+
+def test_segstore_locate_patch_chain(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"))
+    s.put("/x", bytes(100))
+    s.patch("/x", 20, b"\xff" * 10)
+    kind, addr, n, total, _ = s.locate("/x", 22, 4)  # inside the patch
+    assert (kind, n, total) == ("loc", 4, 100)
+    assert s.read(addr, n) == b"\xff" * 4
+    kind, addr, n, total, _ = s.locate("/x", 40, 10)  # wholly in base
+    assert kind == "loc" and s.read(addr, n) == bytes(10)
+    assert s.locate("/x", 15, 10)[0] == "frag"  # straddles the patch
+    s.close()
+
+
+def test_segstore_rkey_bumps_on_compaction(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"), compact_min_dead=1)
+    s.put("/x", b"a" * 100)
+    k0 = s.rkey
+    for _ in range(50):
+        s.put("/x", b"b" * 100)  # churn until a compaction fires
+    s.compact()
+    assert s.rkey != k0
+    s.close()
+
+
+# -- remote one-sided ranged reads -------------------------------------------
+
+
+@pytest.fixture()
+def remote_reader(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=3, replication=2)
+    w = c.open_process("w", "node0")
+    # node2 is outside the chain: every sub-L1 read the reader does must
+    # cross the wire
+    r = c.open_process("r", "node2")
+    yield c, w, r
+    c.close()
+
+
+def test_remote_ranged_read_is_one_sided_and_small(remote_reader):
+    c, w, r = remote_reader
+    val = bytes(range(256)) * 256  # 64KB
+    w.put("/big/v", val)
+    w.digest()
+    tr = c.transport.stats
+    b0, osr0 = tr.bytes_sent, tr.one_sided_reads
+    assert r.get_range("/big/v", 1000, 128) == val[1000:1128]
+    assert tr.one_sided_reads > osr0
+    assert tr.bytes_sent - b0 < len(val) // 5  # no whole-blob transfer
+    # whole-value get comes back one-sided too
+    assert r.get("/big/v") == val
+    assert r.stats["remote_hits"] == 2
+
+
+def test_blob_rpc_toggle_restores_legacy_path(remote_reader):
+    c, w, r = remote_reader
+    val = b"z" * 65536
+    w.put("/big/v", val)
+    w.digest()
+    r.one_sided_reads = False
+    tr = c.transport.stats
+    b0 = tr.bytes_sent
+    assert r.get_range("/big/v", 0, 128) == val[:128]
+    assert tr.bytes_sent - b0 >= len(val)  # whole blob crossed the wire
+
+
+def test_tombstone_never_resurrects_one_sided(remote_reader):
+    c, w, r = remote_reader
+    w.put("/t/x", b"alive")
+    w.digest()                       # value in node0+node1 hot areas
+    assert r.get("/t/x") == b"alive"
+    w.delete("/t/x")
+    w.fsync()                        # tombstone in the chain slots
+    r.dram.clear()
+    assert r.get("/t/x") is None     # slot tombstone is authoritative
+    assert r.get_range("/t/x", 0, 4) is None
+    w.digest()
+    r.dram.clear()
+    assert r.get("/t/x") is None
+
+
+def test_multiget_matches_sequential_gets(remote_reader):
+    c, w, r = remote_reader
+    vals = {f"/m/{i}": bytes([i]) * (100 + i) for i in range(20)}
+    for p, v in vals.items():
+        w.put(p, v)
+    w.digest()
+    got = r.multiget(list(vals) + ["/m/nope"])
+    assert got["/m/nope"] is None
+    for p, v in vals.items():
+        assert got[p] == v
+    # equivalence with sequential gets after the fact
+    for p in vals:
+        assert r.get(p) == vals[p]
+
+
+def test_multiget_batches_locate_rpcs(remote_reader):
+    c, w, r = remote_reader
+    n, batch = 20, 8
+    for i in range(n):
+        w.put(f"/mb/{i}", b"x" * 64)
+    w.digest()
+    r.remote_batch = batch
+    r.dram.clear()
+    r._neg.clear()
+    locates0 = {nid: c.sharedfs[nid].stats["remote_locates"]
+                for nid in c.node_ids}
+    got = r.multiget([f"/mb/{i}" for i in range(n)])
+    assert all(got[f"/mb/{i}"] == b"x" * 64 for i in range(n))
+    for nid in c.node_ids:
+        used = c.sharedfs[nid].stats["remote_locates"] - locates0[nid]
+        assert used <= -(-n // batch)  # <= ceil(N / batch) per peer
+    assert sum(c.sharedfs[nid].stats["remote_locates"] - locates0[nid]
+               for nid in c.node_ids) >= 1
+
+
+def test_negative_cache_short_circuits_and_epoch_invalidates(remote_reader):
+    c, w, r = remote_reader
+    assert r.get("/none/x") is None  # probes peers, parks a neg entry
+    tr = c.transport.stats
+    r0 = tr.rpcs
+    assert r.get("/none/x") is None
+    assert tr.rpcs == r0             # no wire traffic on the neg hit
+    assert r.stats["neg_hits"] == 1
+    c.cm.bump_epoch()                # membership change: entry expires
+    assert r.get("/none/x") is None
+    assert tr.rpcs > r0
+
+
+def test_lease_handoff_drops_negative_entry(remote_reader):
+    c, w, r = remote_reader
+    assert r.get("/h/x") is None     # reader parks a negative entry
+    w.put("/h/x", b"new")            # writer acquire revokes reader's
+    w.digest()                       # lease; digest publishes the value
+    assert r.get("/h/x") == b"new"   # fresh grant dropped the neg entry
+
+
+def test_stale_handle_raises_and_falls_back(remote_reader):
+    c, w, r = remote_reader
+    w.put("/s/x", b"S" * 4096)
+    w.digest()
+    sfs0 = c.sharedfs["node0"]
+    desc = sfs0.locate("/s/x", 0, 4096)
+    assert desc[0] == "val"
+    sfs0.hot.put("/s/x", b"T" * 4096)
+    sfs0.hot.compact()               # memory reuse invalidates the rkey
+    with pytest.raises(StaleHandle):
+        c.transport.one_sided_read("node0", desc[1], desc[2], desc[3],
+                                   rkey=desc[5])
+    # the client path degrades to the ranged RPC, never a wrong read
+    found, v = r._resolve_desc("node0", "/s/x", desc, 0, 4096)
+    assert (found, v) == (True, b"T" * 4096)
+    assert r.stats["stale_handles"] == 1
+
+
+def test_get_range_partial_overlay_over_ranged_base(tmp_cluster):
+    ls = tmp_cluster.open_process("p1")
+    base = bytes(range(256)) * 16    # 4KB
+    ls.put("/po/x", base)
+    ls.digest()                      # base below the log
+    ls.write("/po/x", b"\xaa" * 10, 100)  # small overlay range
+    want = ls.get("/po/x")
+    # window straddles overlay and base: assembled from a ranged window
+    assert ls.get_range("/po/x", 95, 20) == want[95:115]
+    # window past the overlay: pure base pread
+    assert ls.get_range("/po/x", 2000, 50) == want[2000:2050]
+    # window extending past EOF clamps like a full-get slice
+    assert ls.get_range("/po/x", 4090, 100) == want[4090:]
+
+
+def test_patch_range_matches_apply_to():
+    ov = ExtentOverlay()
+    ov.write(10, b"A" * 8)
+    ov.write(30, b"B" * 4)
+    for base in (b"", b"x" * 5, b"y" * 25, b"z" * 60):
+        full = ov.apply_to(base)
+        for off, ln in ((0, 12), (8, 4), (12, 30), (33, 2), (40, 10),
+                        (0, 100), (70, 5)):
+            win = base[off:off + ln]
+            assert ov.patch_range(win, off, ln) == full[off:off + ln], \
+                (base, off, ln)
+
+
+def test_read_peers_deduped_no_self(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=4, replication=2,
+                      n_reserve=1)
+    # harness passes chain = chain + reserves, and reserves again: the
+    # peer list must still be each remote node exactly once
+    ls = c.open_process("p", "node0")
+    assert ls.read_peers == sorted(set(ls.read_peers),
+                                   key=ls.read_peers.index)
+    assert "node0" not in ls.read_peers
+    ls2 = c.open_process("q", "node2",
+                         chain=["node0", "node2", "node3", "node3"])
+    assert "node2" not in ls2.read_peers
+    assert len(ls2.read_peers) == len(set(ls2.read_peers))
+    c.close()
+
+
+def test_slot_locate_one_sided_read_of_undigested(remote_reader):
+    """An fsync'd-but-undigested value is served out of the chain
+    replica's slot buffer by one-sided read (no digest required)."""
+    c, w, r = remote_reader
+    w.put("/sl/x", b"fresh" * 100)
+    w.fsync()                        # in node1's slot, nowhere digested
+    tr = c.transport.stats
+    osr0 = tr.one_sided_reads
+    assert r.get("/sl/x") == b"fresh" * 100
+    assert tr.one_sided_reads > osr0
