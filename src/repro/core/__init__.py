@@ -9,15 +9,19 @@ Public surface:
 """
 from repro.core.cluster import ClusterManager
 from repro.core.extents import ExtentOverlay, splice
+from repro.core.faults import Fault, FaultInjector
 from repro.core.harness import AssiseCluster
 from repro.core.log import (Entry, UpdateLog, OP_DELETE, OP_PUT, OP_RENAME,
                             OP_WRITE, decode_stream)
 from repro.core.segstore import FileArea, SegmentStore
 from repro.core.sharedfs import SharedFS
 from repro.core.store import LibState, recover_process
-from repro.core.transport import Transport, NodeDown
+from repro.core.transport import (Transport, NodeDown, RpcTimeout,
+                                  StaleHandle, with_retries)
 
 __all__ = ["AssiseCluster", "ClusterManager", "Entry", "ExtentOverlay",
-           "FileArea", "LibState", "NodeDown", "SegmentStore", "SharedFS",
+           "Fault", "FaultInjector", "FileArea", "LibState", "NodeDown",
+           "RpcTimeout", "SegmentStore", "SharedFS", "StaleHandle",
            "Transport", "UpdateLog", "OP_PUT", "OP_DELETE", "OP_RENAME",
-           "OP_WRITE", "decode_stream", "recover_process", "splice"]
+           "OP_WRITE", "decode_stream", "recover_process", "splice",
+           "with_retries"]

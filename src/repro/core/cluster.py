@@ -36,6 +36,12 @@ class ClusterManager:
         self.reserves: Dict[str, List[str]] = {}
         # lease manager assignment: subtree -> (node_id, assigned_at)
         self.managers: Dict[str, tuple] = {}
+        # nodes whose failure has already been handled this life: a dead
+        # node reported by two watchers must not bump the epoch twice
+        self._failed_handled: set = set()
+        # union of dirty sets for all *closed* epochs >= the cached key
+        # (only the current epoch's set still grows — see dirty_since)
+        self._dirty_suffix_cache: Dict[int, set] = {}
         self.clock = clock
         self.journal_path = journal_path
         self._watchers = []
@@ -63,6 +69,17 @@ class ClusterManager:
                 elif rec["t"] == "epoch":
                     self.epoch = rec["epoch"]
                     self.epoch_dirty.setdefault(self.epoch, set())
+                elif rec["t"] == "mgr":
+                    if rec["node"] is None:
+                        self.managers.pop(rec["subtree"], None)
+                    else:
+                        self.managers[rec["subtree"]] = (rec["node"],
+                                                         rec["at"])
+        # replayed delegations older than the TTL have expired while the
+        # manager was down: drop them so the next requester wins afresh
+        now = self.clock()
+        self.managers = {st: (m, at) for st, (m, at) in
+                         self.managers.items() if now - at <= MANAGER_TTL}
 
     # -- membership ------------------------------------------------------------
     def register(self, node_id: str) -> None:
@@ -100,6 +117,9 @@ class ClusterManager:
     def bump_epoch(self) -> int:
         self.epoch += 1
         self.epoch_dirty[self.epoch] = set()
+        # the just-closed epoch's set is frozen now: cached suffix
+        # unions built before the bump would miss it
+        self._dirty_suffix_cache.clear()
         self._journal({"t": "epoch", "epoch": self.epoch})
         self._notify("epoch", self.epoch)
         return self.epoch
@@ -108,15 +128,25 @@ class ClusterManager:
         self.epoch_dirty[self.epoch].add(path)
 
     def dirty_since(self, epoch: int) -> set:
-        out = set()
-        for e, paths in self.epoch_dirty.items():
-            if e >= epoch:
-                out |= paths
-        return out
+        """Paths dirtied in any epoch >= ``epoch``. The union over
+        *closed* epochs (everything but the current one) is immutable
+        until the next bump/gc, so it is computed once per (epoch, bump)
+        and cached — repeated rejoin/invalidation calls cost one set
+        union with the live epoch's set, not a rescan of every retained
+        epoch."""
+        base = self._dirty_suffix_cache.get(epoch)
+        if base is None:
+            base = set()
+            for e, paths in self.epoch_dirty.items():
+                if epoch <= e < self.epoch:
+                    base |= paths
+            self._dirty_suffix_cache[epoch] = base
+        return base | self.epoch_dirty.get(self.epoch, set())
 
     def gc_epochs(self, all_recovered_through: int) -> None:
         for e in [e for e in self.epoch_dirty if e < all_recovered_through]:
             del self.epoch_dirty[e]
+        self._dirty_suffix_cache.clear()
 
     # -- chains / reserves ----------------------------------------------------------
     def set_chain(self, subtree: str, chain: List[str],
@@ -136,7 +166,18 @@ class ClusterManager:
                                        self.subtree_chains.get("/", []))
 
     def on_node_failed(self, node_id: str) -> None:
-        """Epoch bump + chain repair: promote a reserve replica (§3.5)."""
+        """Epoch bump + chain repair: promote a reserve replica (§3.5).
+        Idempotent per failure: a dead node reported by several watchers
+        (or a detection tick racing an explicit report) handles the
+        failure exactly once — no double epoch bump, no double repair.
+        The handled mark clears when the node rejoins, so a later
+        genuine re-failure is processed again."""
+        if node_id in self._failed_handled:
+            return
+        self._failed_handled.add(node_id)
+        info = self.nodes.get(node_id)
+        if info:
+            info.alive = False
         self.bump_epoch()
         for st, chain in self.subtree_chains.items():
             if node_id in chain:
@@ -152,6 +193,8 @@ class ClusterManager:
         for st, (mgr, _) in list(self.managers.items()):
             if mgr == node_id:
                 del self.managers[st]
+                self._journal({"t": "mgr", "subtree": st, "node": None,
+                               "at": self.clock()})
         self._notify("failed", node_id)
 
     def on_node_recovered(self, node_id: str) -> None:
@@ -159,6 +202,7 @@ class ClusterManager:
         if info:
             info.alive = True
             info.last_heartbeat = self.clock()
+        self._failed_handled.discard(node_id)
         self._notify("recovered", node_id)
 
     # -- lease-manager delegation (root of the hierarchy) ------------------------------
@@ -174,4 +218,9 @@ class ClusterManager:
                     mgr, NodeInfo("x", 0, False)).alive:
                 return mgr
         self.managers[subtree] = (requester, now)
+        # journaled: a cluster-manager restart must not silently forget
+        # delegation — a second node would be handed the same subtree
+        # while the first keeps serving leases from its table
+        self._journal({"t": "mgr", "subtree": subtree, "node": requester,
+                       "at": now})
         return requester

@@ -1,0 +1,173 @@
+"""Deterministic fault injection for the simulated transport (§3.4/§3.5
+robustness harness).
+
+Two composable modes, both installed via ``Transport.install_faults``:
+
+- **scheduled faults**: explicit ``Fault`` specs that fire on the Nth
+  call matching ``(op, dst, method)`` — exact, reproducible schedules
+  for "drop the 3rd chain_continue to node1" style tests;
+- **seeded random faults**: per-call probabilities drawn from
+  ``random.Random(seed)`` — a deterministic pseudo-random adversary for
+  property tests (same seed, same op sequence => same fault sequence).
+
+Fault kinds:
+
+- ``drop``  — the message is lost; the caller sees ``RpcTimeout``
+  (retriable: see ``transport.with_retries``);
+- ``dup``   — retransmitted duplicate delivery: the call executes twice
+  (exercises idempotency of chain appends, digests, lease grants);
+- ``delay`` — slow link: accounted (``injected['delay']``), not slept;
+- ``stale`` — a one-sided read's handle is invalidated mid-flight
+  (``StaleHandle``), forcing the ranged-RPC fallback path;
+- ``crash`` — kill a node at a **named crash point** mid-protocol
+  (``op`` holds the point name, e.g. ``chain.mid``); the transport
+  invokes its ``on_crash`` callback (wired to ``kill_node`` by the
+  harness) and raises ``NodeDown``.
+
+Named crash points instrumented in the protocol code:
+
+  ``chain.mid``    writer died between the one-sided slot write and the
+                   chain_continue RPC (mid-chain-replication)
+  ``chain.fwd``    a middle replica died while forwarding the chain
+  ``digest.mid``   a replica died after applying its slot but before
+                   truncating it (re-digest must be idempotent)
+  ``digest.apply`` a node died mid-digest, before the area commit
+  ``seal.mid``     writer died after sealing a log region but before
+                   handing it to the digest worker
+  ``lease.revoke`` holder died mid-revocation, before the grace flush
+
+**Fairness guarantee**: random drops are never injected twice in a row
+for the same ``(op, dst, method)`` site, so a bounded retry
+(``attempts >= 2``) always makes progress. Fault injection tests
+protocol *correctness* under transient faults, not liveness against an
+unfair adversary; persistent failures are modeled by ``set_down`` /
+``kill_node`` instead.
+"""
+from __future__ import annotations
+
+import random
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass
+class Fault:
+    """One scheduled fault. ``op`` is ``rpc`` / ``read`` / ``write`` —
+    or, for ``kind='crash'``, the crash-point name. ``method`` matches
+    the RPC method (or region id for one-sided ops); ``'*'`` matches
+    anything. The fault fires on matching calls after skipping the
+    first ``after`` of them, at most ``count`` times (-1 = always)."""
+
+    kind: str                 # drop | dup | delay | stale | crash
+    op: str = "rpc"           # rpc | read | write | <crash-point name>
+    dst: str = "*"
+    method: str = "*"
+    after: int = 0
+    count: int = 1
+    _seen: int = field(default=0, repr=False)
+    _fired: int = field(default=0, repr=False)
+
+    def _matches(self, dst: str, method: str) -> bool:
+        return self.dst in ("*", dst) and self.method in ("*", method)
+
+    def _try_fire(self) -> bool:
+        self._seen += 1
+        if self._seen <= self.after:
+            return False
+        if 0 <= self.count <= self._fired:
+            return False
+        self._fired += 1
+        return True
+
+
+class FaultInjector:
+    """Consulted by ``Transport`` on every RPC / one-sided op. Scheduled
+    faults are checked first (deterministic), then the seeded random
+    adversary. ``injected`` counts fired faults by kind; ``events``
+    records ``(kind, op, dst, method)`` tuples for assertions."""
+
+    def __init__(self, faults: Tuple[Fault, ...] = (), *,
+                 seed: Optional[int] = None, p_drop: float = 0.0,
+                 p_dup: float = 0.0, p_delay: float = 0.0,
+                 p_stale: float = 0.0, max_random: Optional[int] = None):
+        self.faults: List[Fault] = list(faults)
+        self.rng = random.Random(seed)
+        self.p_drop = p_drop
+        self.p_dup = p_dup
+        self.p_delay = p_delay
+        self.p_stale = p_stale
+        self.max_random = max_random
+        self._n_random = 0
+        self._no_drop = set()  # sites owed a fair retry (see module doc)
+        self.injected = Counter()
+        self.events: List[tuple] = []
+
+    # -- bookkeeping -------------------------------------------------------
+    def _record(self, kind: str, op: str, dst: str, method: str) -> str:
+        self.injected[kind] += 1
+        self.events.append((kind, op, dst, method))
+        return kind
+
+    # -- per-call decisions (called by Transport) --------------------------
+    def _action(self, op: str, dst: str, method: str) -> Optional[str]:
+        for f in self.faults:
+            if f.kind == "crash" or f.op != op or not f._matches(dst,
+                                                                 method):
+                continue
+            if f._try_fire():
+                return self._record(f.kind, op, dst, method)
+        return self._random_action(op, dst, method)
+
+    def _random_action(self, op: str, dst: str,
+                       method: str) -> Optional[str]:
+        if self.max_random is not None \
+                and self._n_random >= self.max_random:
+            return None
+        key = (op, dst, method)
+        retrying = key in self._no_drop
+        if retrying:
+            self._no_drop.discard(key)
+        # one draw per call, partitioned into kind intervals: the fault
+        # sequence is a pure function of (seed, call sequence)
+        r = self.rng.random()
+        lo = 0.0
+        for kind, p in (("drop", self.p_drop), ("dup", self.p_dup),
+                        ("stale", self.p_stale), ("delay", self.p_delay)):
+            if p <= 0.0:
+                continue
+            if kind == "stale" and op != "read":
+                continue  # only one-sided reads carry an rkey
+            if kind == "dup" and op == "read":
+                continue  # duplicate read delivery is invisible
+            if lo <= r < lo + p:
+                if kind == "drop" and retrying:
+                    return None  # fairness: never drop the same retry
+                if kind == "drop":
+                    self._no_drop.add(key)
+                self._n_random += 1
+                return self._record(kind, op, dst, method)
+            lo += p
+        return None
+
+    def rpc_action(self, dst: str, method: str) -> Optional[str]:
+        return self._action("rpc", dst, method)
+
+    def read_action(self, dst: str, region_id: str) -> Optional[str]:
+        return self._action("read", dst, region_id)
+
+    def write_action(self, dst: str, region_id: str) -> Optional[str]:
+        return self._action("write", dst, region_id)
+
+    def should_crash(self, point: str, node_id: str) -> bool:
+        """Whether a scheduled crash fault fires at this named crash
+        point on this node (random mode never crashes — node loss is an
+        explicit schedule decision)."""
+        for f in self.faults:
+            if f.kind != "crash" or f.op != point \
+                    or not f._matches(node_id, "*"):
+                continue
+            if f._try_fire():
+                self._record("crash", point, node_id, "*")
+                return True
+        return False

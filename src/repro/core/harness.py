@@ -7,7 +7,10 @@ Failure injection:
   kill_node(id)             — node loss (heartbeat timeout -> epoch bump,
                               chain repair, reserve promotion)
   restart_node(id)          — rejoin: epoch-bitmap invalidation + resync
-  failover_process(..)      — restart an app on a cache replica
+  failover_process(..)      — promote an app onto a warm cache replica
+  inject_faults(..)         — install a seeded FaultInjector on the
+                              transport (drops/dups/delays/stale handles
+                              + named crash points; see faults.py)
 """
 from __future__ import annotations
 
@@ -17,9 +20,10 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core.cluster import ClusterManager
+from repro.core.faults import FaultInjector
 from repro.core.sharedfs import SharedFS
 from repro.core.store import LibState, recover_process
-from repro.core.transport import Transport
+from repro.core.transport import Transport, with_retries
 
 
 class AssiseCluster:
@@ -54,6 +58,20 @@ class AssiseCluster:
         self.cm.set_chain("/", chain, reserve)
         self.procs: Dict[str, LibState] = {}
         self.dead_nodes = set()
+        # crash faults kill the node mid-protocol (see Transport.crashpoint)
+        self.transport.on_crash = self.kill_node
+
+    # -- fault injection -------------------------------------------------------
+    def inject_faults(self, faults=(), **kw) -> FaultInjector:
+        """Install a fault injector on the cluster transport (scheduled
+        faults and/or a seeded random adversary — see faults.py) and
+        return it for assertions. Replaces any previous injector."""
+        inj = FaultInjector(faults, **kw)
+        self.transport.install_faults(inj)
+        return inj
+
+    def clear_faults(self) -> None:
+        self.transport.install_faults(None)
 
     # -- processes -------------------------------------------------------------
     def open_process(self, proc_id: str, node_id: Optional[str] = None,
@@ -116,21 +134,72 @@ class AssiseCluster:
         failed = [n for n in self.node_ids
                   if n in self.dead_nodes and self.cm.nodes[n].alive]
         for n in failed:
-            self.cm.nodes[n].alive = False
-            self.cm.on_node_failed(n)
+            self.cm.on_node_failed(n)  # idempotent: handled once per death
         return failed
 
-    def failover_process(self, proc_id: str, subtree: str = "/") -> LibState:
-        """Restart the app on the first *alive* cache replica. The
-        replica's SharedFS digests the replicated slot — all acked writes
-        are immediately visible (near-instant failover)."""
+    def failover_process(self, proc_id: str, subtree: str = "/", *,
+                         fast: bool = True) -> LibState:
+        """Restart the app on the first *alive* cache replica.
+
+        ``fast=True`` (the paper's §3.5 promotion, fig15's measured
+        path): the replica serves immediately off its slot mirror +
+        SharedFS tiers — the undigested slot suffix replays on the
+        *background* digest worker, so the critical path is
+        O(dirty-since-last-digest) bookkeeping, not O(total state). The
+        successor's seqnos continue past the slot's chain-acked
+        watermark (max across alive replicas), and its first inline
+        digest settles behind the queued slot replay (FIFO), so nothing
+        newer can be overwritten by the replay. Leases migrate via the
+        epoch bump failure detection already performed: every surviving
+        process re-acquires from the new manager on its next op (see
+        ``LibState._check_epoch``).
+
+        ``fast=False`` is the legacy synchronous path — drain + digest
+        the whole slot before serving — kept as the same-run comparison
+        toggle (fig15's "recover-inline" row)."""
         reserves = self.cm.reserves.get("/", [])
         chain = self.cm.chain_for(subtree + "/x") + reserves
         target = next(n for n in chain if n not in self.dead_nodes)
         sfs = self.sharedfs[target]
-        sfs.recover_dead_process(proc_id)
-        ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
-                      subtree=subtree, fsync_data=self.fsync_data)
+        if fast:
+            survivors = [n for n in chain
+                         if n != target and n not in self.dead_nodes]
+            # a replica further down the chain may have acked more than
+            # the target if the writer died mid-chain: continue past all
+            acked_local = sfs.slot_acked(proc_id)
+            acked, best = acked_local, None
+            for nid in survivors:
+                try:
+                    # retried: a transiently dropped probe would
+                    # under-report the watermark and collide seqnos
+                    a = with_retries(lambda n=nid: self.transport.rpc(
+                        n, "slot_acked", proc_id))
+                except Exception:
+                    continue
+                if a > acked:
+                    acked, best = a, nid
+            if best is not None:
+                # pull the entries that further replica acked but this
+                # one never received, so the promoted cut is the maximum
+                # acked prefix (O(dirty-since-last-digest) bytes)
+                try:
+                    data = with_retries(
+                        lambda: self.transport.rpc(
+                            best, "slot_suffix", proc_id, acked_local))
+                    if data:
+                        sfs.slot_for(proc_id).write(None, data)
+                except Exception:
+                    pass
+            sfs.promote_dead_process(proc_id, peers=survivors)
+            ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
+                          subtree=subtree, fsync_data=self.fsync_data,
+                          start_seqno=acked, settle_before_digest=True)
+        else:
+            sfs.recover_dead_process(proc_id)
+            acked = sfs.slot_acked(proc_id)
+            ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
+                          subtree=subtree, fsync_data=self.fsync_data,
+                          start_seqno=acked)
         self.procs[proc_id] = ls
         return ls
 

@@ -169,7 +169,7 @@ class UpdateLog:
     """
 
     def __init__(self, path: str, capacity_bytes: int = 1 << 30,
-                 fsync_data: bool = False):
+                 fsync_data: bool = False, start_seqno: int = 0):
         self.path = path
         self.capacity = capacity_bytes
         self.fsync_data = fsync_data
@@ -189,6 +189,17 @@ class UpdateLog:
         self._file_lock = threading.RLock()
         self._read_base()
         self._recover_from_file()
+        if start_seqno >= self._next_seq:
+            # failover continuation: a successor process must mint
+            # seqnos past the dead predecessor's chain-acked watermark
+            # (the replica slots dedup by seqno and would silently drop
+            # a restarted stream). Persisted as the base so a later
+            # *local* recovery of this log keeps the continuation too.
+            self._next_seq = start_seqno + 1
+            if not self._entries and start_seqno > self._base_seq:
+                self._base_seq = start_seqno
+                with self._file_lock:
+                    self._write_base()
 
     # -- append path --------------------------------------------------------
     def append(self, op: int, path: str, data: bytes = b"",

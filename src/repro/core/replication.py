@@ -30,7 +30,7 @@ from repro.core.log import _HDR, _WRITE_BUF  # wire header / buffer size
 from repro.core.extents import apply_range_write
 from repro.core.log import (Entry, affected_paths, decode_stream,
                             renames_touch)
-from repro.core.transport import next_rkey
+from repro.core.transport import next_rkey, with_retries
 
 
 def _apply_to_table(table: dict, e: Entry) -> None:
@@ -160,15 +160,32 @@ class ReplicaSlot:
 
     # transport sink interface -------------------------------------------------
     def write(self, offset: Optional[int], data: bytes) -> None:
-        """One-sided append (RDMA WRITE). Persist + decode new entries."""
+        """One-sided append (RDMA WRITE). Persist + decode new entries.
+
+        Idempotent by seqno: entries at or below the slot's tail (or its
+        digested watermark when empty) are skipped, so a retransmitted
+        write — a retried chain step after a dropped ack, or an injected
+        duplicate delivery — never double-applies. Entries in one stream
+        have strictly increasing seqnos, so the survivors are a byte
+        suffix of ``data``."""
         with self._lock:
+            entries = decode_stream(data)
+            tail = (self.entries[-1].seqno if self.entries
+                    else self.digested_seqno)
+            keep = [e for e in entries if e.seqno > tail]
+            if not keep:
+                return
+            if len(keep) != len(entries):
+                skip = sum(e.nbytes for e in entries[:len(entries)
+                                                    - len(keep)])
+                data = data[skip:]
             self._f.write(data)
             self._f.flush()
             if self.fsync_data:
                 os.fsync(self._f.fileno())
             start = len(self._buf)
             self._buf += data
-            self._ingest(decode_stream(data), start)
+            self._ingest(keep, start)
 
     def read(self, offset: int, size: int) -> bytes:
         # locked: a concurrent truncation reshapes _buf, and a one-sided
@@ -183,6 +200,15 @@ class ReplicaSlot:
 
     def entries_since(self, seqno: int) -> List[Entry]:
         return self.entries[self._idx_after(seqno):]
+
+    def suffix_bytes(self, seqno: int) -> bytes:
+        """Raw encoded bytes of every entry with a seqno beyond
+        ``seqno`` — the wire form a peer slot can ingest directly."""
+        with self._lock:
+            i = self._idx_after(seqno)
+            cut = (self._offsets[i] if i < len(self.entries)
+                   else len(self._buf))
+            return bytes(self._buf[cut:])
 
     def truncate_through(self, seqno: int) -> None:
         """Drop digested entries by rotating the undigested suffix into
@@ -259,12 +285,21 @@ class ReplicaSlot:
 
 
 class ChainClient:
-    """Writer-side chain replication."""
+    """Writer-side chain replication.
 
-    def __init__(self, proc_id: str, chain: List[str], transport):
+    Transient wire faults (``RpcTimeout``) are absorbed by bounded
+    retries — safe because ``ReplicaSlot.write`` dedups by seqno, so a
+    retried one-sided write + chain_continue is idempotent end to end.
+    ``NodeDown`` still surfaces: a dead replica cannot ack, and the
+    caller's next op after failure detection refreshes the chain (see
+    ``LibState._check_epoch``)."""
+
+    def __init__(self, proc_id: str, chain: List[str], transport,
+                 owner: Optional[str] = None):
         self.proc_id = proc_id
         self.chain = list(chain)  # replica node ids, in order (no self)
         self.transport = transport
+        self.owner = owner  # writer's node id (crash-point identity)
         self.replicated_seqno = 0
 
     def replicate(self, entries: List[Entry],
@@ -284,9 +319,17 @@ class ChainClient:
             data = b"".join(e.encode() for e in entries)
         head, rest = self.chain[0], self.chain[1:]
         region = f"slot/{self.proc_id}"
-        self.transport.one_sided_write(head, region, data)
-        ack = self.transport.rpc(head, "chain_continue", self.proc_id, data,
-                                 rest)
+
+        def _attempt():
+            self.transport.one_sided_write(head, region, data)
+            if self.owner is not None:
+                # writer dies between the slot write and the continue
+                # RPC: the head holds the bytes, the ack never happened
+                self.transport.crashpoint("chain.mid", self.owner)
+            return self.transport.rpc(head, "chain_continue",
+                                      self.proc_id, data, rest)
+
+        ack = with_retries(_attempt, stats=self.transport.stats)
         self.replicated_seqno = max(self.replicated_seqno,
                                     entries[-1].seqno)
         assert ack >= entries[-1].seqno, (ack, entries[-1].seqno)
@@ -299,5 +342,8 @@ class ChainClient:
         round-trip per replica."""
         if not self.chain:
             return
-        self.transport.rpc(self.chain[0], "digest_slot_chain",
-                           self.proc_id, through_seqno, self.chain[1:])
+        with_retries(
+            lambda: self.transport.rpc(self.chain[0], "digest_slot_chain",
+                                       self.proc_id, through_seqno,
+                                       self.chain[1:]),
+            stats=self.transport.stats)

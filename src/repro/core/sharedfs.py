@@ -23,6 +23,7 @@ from repro.core.extents import ExtentOverlay
 from repro.core.leases import LeaseManager, READ, WRITE
 from repro.core.replication import ReplicaSlot
 from repro.core.segstore import SegmentStore
+from repro.core.transport import with_retries
 
 # The segment-log engine is the Area now; the name survives for callers.
 Area = SegmentStore
@@ -54,7 +55,8 @@ class SharedFS:
         self.permissions: Dict[str, tuple] = {}  # prefix -> (read, write)
         self.recovered_epoch = 0
         self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
-                      "remote_locates": 0, "invalidated": 0, "bg_jobs": 0}
+                      "remote_locates": 0, "invalidated": 0, "bg_jobs": 0,
+                      "promotions": 0}
         # persistent areas are one-sided readable: a remote LibFS
         # resolves a (path, range) to a physical extent via locate(),
         # then pulls exactly those bytes with Transport.one_sided_read —
@@ -124,7 +126,11 @@ class SharedFS:
         keep digesting), and the join is best-effort."""
         self._abandon = abandon
         t = self._digest_thread
-        if t is not None and t.is_alive():
+        if t is not None and t.is_alive() \
+                and t is not threading.current_thread():
+            # the current-thread guard matters for injected crashes: a
+            # crash point firing ON the digest worker (kill_node ->
+            # shutdown) must not try to join itself
             self._digest_q.put(None)
             # abandon: best-effort join — a job wedged on dead-node IO
             # must not stall the failure path; it skips on wake anyway
@@ -146,6 +152,13 @@ class SharedFS:
     def ensure_slot(self, proc_id: str) -> None:
         self.slot_for(proc_id)
 
+    def slot_suffix(self, proc_id: str, since_seqno: int) -> bytes:
+        """RPC: the raw undigested slot suffix beyond ``since_seqno`` —
+        lets a promoting replica pull entries a further-down replica
+        acked that it never received (writer died mid-chain)."""
+        slot = self.slots.get(proc_id)
+        return slot.suffix_bytes(since_seqno) if slot is not None else b""
+
     def in_slot(self, path: str) -> bool:
         """Whether any replica slot's mirror holds fresher (undigested)
         state for the path — one reverse-index dict hit, not a scan of
@@ -154,28 +167,25 @@ class SharedFS:
 
     def chain_continue(self, proc_id: str, data: bytes,
                        rest: List[str]) -> int:
-        """RPC: continue chain replication; ack = last seqno seen."""
+        """RPC: continue chain replication; ack = last seqno seen.
+
+        The one-sided write may already have landed (writer wrote to us
+        directly as chain head), the writer may be retrying after a
+        dropped ack, or recovery may be re-shipping a log suffix a
+        background digest already applied here: ``ReplicaSlot.write``
+        dedups by seqno (digested watermark counts as the tail when the
+        slot is empty), so appending is idempotent end to end. An older
+        seqno the slot lacks was coalesced out of a batch it already
+        acked — the coalesced stream is replay-equivalent — and is
+        likewise skipped rather than replayed over newer state."""
         slot = self.slot_for(proc_id)
-        incoming = L.decode_stream(data) if data else []
-        if incoming:
-            # One-sided write may already have landed (writer wrote to us
-            # directly as chain head). Idempotent append: only entries
-            # NEWER than the slot's tail — an older seqno the slot lacks
-            # was coalesced out of a batch it already acked (the
-            # coalesced stream is replay-equivalent), and appending it
-            # now would replay stale data over newer and unsort the
-            # slot's seqno index. The digested watermark counts as the
-            # tail when the slot is empty: process recovery re-ships the
-            # whole surviving log suffix, which may include entries a
-            # background digest already applied here.
-            with slot._lock:
-                last = slot.entries[-1].seqno if slot.entries \
-                    else slot.digested_seqno
-                for e in incoming:
-                    if e.seqno > last:
-                        slot.write(None, e.encode())
+        if data:
+            slot.write(None, data)
         if rest:
             head, tail = rest[0], rest[1:]
+            # a middle replica dying right here leaves the prefix acked
+            # nowhere: the writer sees NodeDown, the op is not acked
+            self.transport.crashpoint("chain.fwd", self.node_id)
             self.transport.one_sided_write(head, f"slot/{proc_id}", data)
             return self.transport.rpc(head, "chain_continue", proc_id, data,
                                       tail)
@@ -194,6 +204,9 @@ class SharedFS:
                 applied += 1
             self._evict_if_needed()
             self._commit_areas()
+            # dying here (applied, not yet truncated) is safe exactly
+            # because re-digesting the same slot prefix is idempotent
+            self.transport.crashpoint("digest.mid", self.node_id)
             # truncate only after the applied entries are durable in the
             # areas — a crash in between must never lose the digested range
             slot.truncate_through(through_seqno)
@@ -215,6 +228,10 @@ class SharedFS:
         with self._digest_lock:
             for e in entries:
                 self._apply_entry(e)
+            # node dies mid-digest, before the area commit: the applied
+            # batch is buffered, not durable — recovery replays it from
+            # the replicated log (slots), never from the torn area
+            self.transport.crashpoint("digest.apply", self.node_id)
             self.stats["digests"] += 1
             self._evict_if_needed()
             self._commit_areas()
@@ -268,7 +285,12 @@ class SharedFS:
             if nid == self.node_id:
                 continue
             try:
-                found, v = self.transport.rpc(nid, "read_remote", path)
+                # retried: a transient drop must not demote to the next
+                # peer (whose copy may be staler) or to a fabricated base
+                found, v = with_retries(
+                    lambda n=nid: self.transport.rpc(n, "read_remote",
+                                                     path),
+                    stats=self.transport.stats)
             except Exception:
                 continue
             if found:
@@ -480,8 +502,12 @@ class SharedFS:
         if mgr_node == self.node_id:
             lease = self.lease_mgr.acquire(holder, path, mode, now)
             return (lease.path, lease.mode, lease.expires_at)
-        return self.transport.rpc(mgr_node, "lease_acquire_local", holder,
-                                  path, mode)
+        # idempotent at the manager (a re-acquire refreshes the grant),
+        # so a dropped grant RPC is safely retried
+        return with_retries(
+            lambda: self.transport.rpc(mgr_node, "lease_acquire_local",
+                                       holder, path, mode),
+            stats=self.transport.stats)
 
     def lease_acquire_local(self, holder: str, path: str,
                             mode: str) -> Tuple[str, str, float]:
@@ -502,7 +528,12 @@ class SharedFS:
             if nid == self.node_id:
                 continue
             try:
-                if self.transport.rpc(nid, "revoke_holder", holder, path):
+                # retried: a dropped revocation would leave the holder
+                # serving stale cached state against a revoked grant
+                if with_retries(
+                        lambda n=nid: self.transport.rpc(
+                            n, "revoke_holder", holder, path),
+                        stats=self.transport.stats):
                     return
             except Exception:
                 continue  # dead node: its procs died with it
@@ -516,6 +547,74 @@ class SharedFS:
         return True
 
     # -- process failure (LibFS recovery, paper §3.4) -------------------------------
+    def slot_acked(self, proc_id: str) -> int:
+        """RPC: chain-acked watermark of this node's slot for a process
+        (0 when the node never held one). Failover uses the max across
+        replicas so the successor's seqnos continue past every copy."""
+        slot = self.slots.get(proc_id)
+        return slot.acked_seqno if slot is not None else 0
+
+    def promote_dead_process(self, proc_id: str,
+                             peers: List[str] = ()) -> int:
+        """Fast promotion (§3.5): make this warm cache replica the
+        serving node for a dead process's state *immediately*. Nothing
+        is replayed on the critical path — the slot mirror already
+        materializes the chain-acked undigested suffix and ``read_any``
+        consults it first, so promotion is: release the dead holder's
+        leases, queue the O(dirty-since-last-digest) slot replay on the
+        background digest worker, and return the acked watermark the
+        successor continues its seqnos from. FIFO ordering on the
+        worker means the suffix lands in the areas before any digest
+        the successor seals afterwards, so the slot's freshest-first
+        read order can never be beaten by a newer write (the inline
+        ``digest()`` path adds a one-shot settle barrier for the same
+        reason — see ``LibState``). Contrast ``recover_dead_process``,
+        which drains + digests synchronously: that is the O(total
+        recovery) cold path fig15 compares against.
+
+        ``peers`` are the other *surviving* slot-mirror holders (chain +
+        reserves). The background replay re-ships this slot's suffix to
+        them and fans out the digest so every surviving tier converges
+        on the same cut: without lockstep, a read that falls through to
+        a staler peer tier can resurrect a deleted key or serve a mix
+        of two cuts."""
+        self.lease_mgr.release_all(proc_id)
+        self.local_procs.pop(proc_id, None)
+        slot = self.slots.get(proc_id)
+        acked = slot.acked_seqno if slot is not None else 0
+        others = [n for n in peers if n != self.node_id]
+        if slot is not None and (slot.entries or others):
+            data = slot.suffix_bytes(slot.digested_seqno)
+
+            def _replay():
+                for nid in others:
+                    try:
+                        with_retries(
+                            lambda n=nid: self.transport.rpc(
+                                n, "ensure_slot", proc_id),
+                            stats=self.transport.stats)
+                        if data:
+                            with_retries(
+                                lambda n=nid: self.transport.rpc(
+                                    n, "chain_continue", proc_id, data,
+                                    []),
+                                stats=self.transport.stats)
+                    except Exception:
+                        pass  # dead peer: chain repair handles it
+                self.digest_slot(proc_id, acked)
+                for nid in others:
+                    try:
+                        with_retries(
+                            lambda n=nid: self.transport.rpc(
+                                n, "digest_slot", proc_id, acked),
+                            stats=self.transport.stats)
+                    except Exception:
+                        pass  # dead peer: chain repair handles it
+
+            self.submit_digest(_replay)
+        self.stats["promotions"] += 1
+        return acked
+
     def recover_dead_process(self, proc_id: str) -> int:
         """Idempotent log-based eviction of a dead process's updates.
         Drains this node's digest worker first so an in-flight sealed

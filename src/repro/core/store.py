@@ -46,7 +46,7 @@ from repro.core.leases import READ, WRITE, covers
 from repro.core.log import SealedRegion, UpdateLog
 from repro.core.replication import ChainClient
 from repro.core.sharedfs import SharedFS
-from repro.core.transport import StaleHandle
+from repro.core.transport import StaleHandle, with_retries
 
 
 class DramCache:
@@ -182,7 +182,8 @@ class LibState:
                  mode: str = "pessimistic", log_capacity: int = 1 << 30,
                  dram_capacity: int = 2 << 30, subtree: str = "/",
                  fsync_data: bool = False, pipeline_digests: bool = True,
-                 one_sided_reads: bool = True, remote_batch: int = 32):
+                 one_sided_reads: bool = True, remote_batch: int = 32,
+                 start_seqno: int = 0, settle_before_digest: bool = False):
         assert mode in ("pessimistic", "optimistic")
         self.proc_id = proc_id
         self.sfs = sharedfs
@@ -190,12 +191,23 @@ class LibState:
         self.transport = sharedfs.transport
         self.mode = mode
         self.subtree = subtree
+        # start_seqno: failover continuation — the successor's seqnos
+        # must start past every replica slot's acked watermark, or the
+        # slots' seqno dedup would silently drop all its replication
         self.log = UpdateLog(
             f"{sharedfs.root}/nvm/proc/{proc_id}.log", log_capacity,
-            fsync_data)
+            fsync_data, start_seqno=start_seqno)
         self.dram = DramCache(dram_capacity)
         peers = [n for n in chain if n != sharedfs.node_id]
-        self.chain = ChainClient(proc_id, peers, sharedfs.transport)
+        self.chain = ChainClient(proc_id, peers, sharedfs.transport,
+                                 owner=sharedfs.node_id)
+        # one-shot barrier for fast promotion: the predecessor's slot
+        # suffix is replaying on the node's digest worker, and the first
+        # inline digest must not apply *newer* entries to the areas
+        # before that older suffix lands (see promote_dead_process)
+        self._settle_before_digest = settle_before_digest
+        # epoch watermark for lease/chain migration (see _check_epoch)
+        self._epoch_seen = self.cluster.epoch
         self.reserves = [n for n in (reserves or [])
                          if n != sharedfs.node_id]
         # remote read tier: reserves first (paper §3.5 — their NVM holds
@@ -217,7 +229,10 @@ class LibState:
         # implicitly by an epoch bump (membership change).
         self._neg: Dict[str, int] = {}
         for n in peers:
-            sharedfs.transport.rpc(n, "ensure_slot", proc_id)
+            with_retries(
+                lambda n=n: sharedfs.transport.rpc(n, "ensure_slot",
+                                                   proc_id),
+                stats=sharedfs.transport.stats)
         sharedfs.local_procs[proc_id] = self
         self.digest_threshold = 0.75
         # pipeline state: threshold digests run on the SharedFS worker
@@ -240,8 +255,41 @@ class LibState:
                       "coalesced_out": 0, "lease_cache_hits": 0,
                       "lease_acquires": 0}
 
+    # -- epoch migration (paper §3.4: leases migrate via the epoch bump) ------
+    def _check_epoch(self) -> None:
+        """Two int compares on the no-change fast path. On an epoch bump
+        (membership changed): drop cached leases — the manager that
+        granted them may be dead, and the new manager has no record of
+        them, so every grant must be re-acquired (this IS the lease
+        migration; revocation-based invalidation cannot reach us from a
+        dead manager's table) — drop DRAM/negative caches that could
+        hide a failed-over writer's changes, and re-resolve the replica
+        chain so replication targets the repaired membership instead of
+        raising NodeDown at a dead replica forever."""
+        ep = self.cluster.epoch
+        if ep == self._epoch_seen:
+            return
+        self._epoch_seen = ep
+        self._lease_cache.clear()
+        self._neg.clear()
+        self.dram.clear()
+        self._refresh_chain()
+
+    def _refresh_chain(self) -> None:
+        me = self.sfs.node_id
+        chain = self.cluster.chain_for(self.subtree.rstrip("/") + "/x")
+        reserves = self.cluster.reserves.get("/", [])
+        seen = set()
+        self.chain.chain = [n for n in list(chain) + list(reserves)
+                            if n != me and not (n in seen or seen.add(n))]
+        self.reserves = [n for n in reserves if n != me]
+        seen = set()
+        self.read_peers = [n for n in self.reserves + self.chain.chain
+                           if n != me and not (n in seen or seen.add(n))]
+
     # -- leases ---------------------------------------------------------------
     def _lease(self, path: str, mode: str) -> None:
+        self._check_epoch()
         now = self.cluster.clock()
         probe = path
         while True:  # exact path, then each ancestor (subtree leases)
@@ -352,12 +400,14 @@ class LibState:
         self._neg.pop(dst, None)
 
     def fsync(self) -> None:
+        self._check_epoch()
         self.log.persist()
         if self.mode == "pessimistic":
             with self._repl_lock:
                 self._replicate(coalesce=False)
 
     def dsync(self) -> None:
+        self._check_epoch()
         self.log.persist()
         with self._repl_lock:
             self._replicate(coalesce=(self.mode == "optimistic"))
@@ -413,7 +463,15 @@ class LibState:
         """One remote read: locate + rkey-guarded one-sided read of
         exactly the requested bytes (``length=None``: the whole value).
         With ``one_sided_reads`` off this is the legacy whole-blob
-        ``read_remote`` RPC, sliced client-side."""
+        ``read_remote`` RPC, sliced client-side. Bounded retries absorb
+        transient drops — without them a lost locate would demote the
+        read to a (possibly staler) next peer or a false miss."""
+        return with_retries(
+            lambda: self._remote_fetch_once(nid, path, offset, length),
+            stats=self.transport.stats)
+
+    def _remote_fetch_once(self, nid: str, path: str, offset: int = 0,
+                           length: Optional[int] = None):
         if not self.one_sided_reads:
             found, v = self.transport.rpc(nid, "read_remote", path)
             if not found or v is None or length is None:
@@ -602,8 +660,11 @@ class LibState:
             chunk = paths[i:i + self.remote_batch]
             try:
                 if self.one_sided_reads:
-                    descs = self.transport.rpc(
-                        nid, "locate_batch", [(p, 0, None) for p in chunk])
+                    descs = with_retries(
+                        lambda: self.transport.rpc(
+                            nid, "locate_batch",
+                            [(p, 0, None) for p in chunk]),
+                        stats=self.transport.stats)
                 else:
                     descs = None  # legacy: per-path whole-blob RPC
             except Exception:
@@ -612,10 +673,15 @@ class LibState:
             for j, p in enumerate(chunk):
                 try:
                     if descs is None:
-                        found, v = self.transport.rpc(nid, "read_remote", p)
+                        found, v = with_retries(
+                            lambda p=p: self.transport.rpc(
+                                nid, "read_remote", p),
+                            stats=self.transport.stats)
                     else:
-                        found, v = self._resolve_desc(nid, p, descs[j],
-                                                      0, None)
+                        found, v = with_retries(
+                            lambda p=p, j=j: self._resolve_desc(
+                                nid, p, descs[j], 0, None),
+                            stats=self.transport.stats)
                 except Exception:
                     still.append(p)
                     continue
@@ -647,6 +713,9 @@ class LibState:
         if region is None:
             return
         self.log.persist()
+        # writer dies after sealing, before the worker takes the region:
+        # the sealed suffix exists only in this node's NVM log
+        self.transport.crashpoint("seal.mid", self.sfs.node_id)
         job = _DigestJob(region)
         self._inflight = job
         self.stats["seals"] += 1
@@ -720,6 +789,13 @@ class LibState:
 
     # -- digest (synchronous: replicate + apply + truncate) ----------------------
     def digest(self) -> None:
+        self._check_epoch()
+        if self._settle_before_digest:
+            # fast promotion queued the predecessor's slot replay on the
+            # node's FIFO digest worker: let that older suffix land in
+            # the areas before this digest applies newer entries over it
+            self.sfs.drain_digests()
+            self._settle_before_digest = False
         self._reap(wait=True)
         self.log.persist()
         with self._repl_lock:
@@ -736,6 +812,9 @@ class LibState:
     def flush_for_revocation(self) -> None:
         """Lease revocation grace: replicate + digest so the next holder
         sees all our updates via its SharedFS."""
+        # holder dies mid-revocation, before the grace flush: the new
+        # holder must see exactly the chain-acked prefix, nothing torn
+        self.transport.crashpoint("lease.revoke", self.sfs.node_id)
         self.digest()
 
     # -- lifecycle ---------------------------------------------------------------
@@ -783,9 +862,17 @@ def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
     for nid in chain:
         if nid != sharedfs.node_id:
             try:
-                sharedfs.transport.rpc(nid, "ensure_slot", proc_id)
-                sharedfs.transport.rpc(nid, "chain_continue", proc_id,
-                                       enc, [])
+                # retried: a transiently dropped re-ship would leave one
+                # replica's slot missing the tail — and serving stale
+                # mirror state — while this node digests it
+                with_retries(
+                    lambda n=nid: sharedfs.transport.rpc(
+                        n, "ensure_slot", proc_id),
+                    stats=sharedfs.transport.stats)
+                with_retries(
+                    lambda n=nid: sharedfs.transport.rpc(
+                        n, "chain_continue", proc_id, enc, []),
+                    stats=sharedfs.transport.stats)
             except Exception:
                 pass  # dead replica: chain repair handles it
     if entries:
@@ -796,7 +883,10 @@ def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
     for nid in chain:
         if nid != sharedfs.node_id:
             try:
-                sharedfs.transport.rpc(nid, "digest_slot", proc_id, upto)
+                with_retries(
+                    lambda n=nid: sharedfs.transport.rpc(
+                        n, "digest_slot", proc_id, upto),
+                    stats=sharedfs.transport.stats)
             except Exception:
                 pass  # dead replica: chain repair handles it
     sharedfs.lease_mgr.release_all(proc_id)

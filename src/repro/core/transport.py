@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 
 
@@ -35,6 +36,33 @@ class NodeDown(RuntimeError):
 class StaleHandle(RuntimeError):
     """One-sided access with an invalidated rkey (remote memory was
     reused since the handle was resolved)."""
+
+
+class RpcTimeout(RuntimeError):
+    """A message was lost on the wire (injected drop / timeout). Unlike
+    ``NodeDown`` this is *transient*: the peer may be healthy and the
+    caller should retry with backoff (see ``with_retries``)."""
+
+
+def with_retries(fn, *, attempts: int = 4, backoff_s: float = 2e-4,
+                 retriable=(RpcTimeout,), stats: "TransportStats" = None):
+    """Bounded retry with exponential backoff for transient transport
+    faults. ``fn`` must be idempotent at the receiver (chain appends
+    dedup by seqno, digests re-apply cleanly, lease grants refresh).
+    ``NodeDown`` is deliberately NOT retriable by default: a dead peer
+    needs failure detection + chain repair, not a retry storm."""
+    delay = backoff_s
+    for k in range(attempts):
+        try:
+            return fn()
+        except retriable:
+            if k == attempts - 1:
+                raise
+            if stats is not None:
+                stats.retries += 1
+            if delay > 0:
+                time.sleep(delay)
+                delay *= 2
 
 
 # Globally unique rkey generator: region owners take a fresh key at
@@ -74,6 +102,7 @@ class TransportStats:
     bytes_sent: int = 0
     bytes_read: int = 0
     rpc_resp_bytes: int = 0
+    retries: int = 0
     per_node: dict = field(default_factory=dict)
 
     def account(self, dst, nbytes, kind):
@@ -115,6 +144,30 @@ class Transport:
         self._down = set()
         self._lock = threading.RLock()
         self.stats = TransportStats()
+        self.injector = None       # optional FaultInjector (see faults.py)
+        self.on_crash = None       # callback(node_id) for crash faults
+
+    # -- fault injection ---------------------------------------------------
+    def install_faults(self, injector) -> None:
+        """Install (or clear, with None) a ``FaultInjector`` consulted on
+        every RPC and one-sided op."""
+        self.injector = injector
+
+    def crashpoint(self, name: str, node_id: str) -> None:
+        """Named crash point in protocol code (e.g. ``chain.mid``): if
+        the installed injector schedules a crash here, kill ``node_id``
+        via the ``on_crash`` callback (the harness wires ``kill_node``)
+        and raise ``NodeDown`` out of the interrupted operation — the
+        node died with the protocol step half done."""
+        inj = self.injector
+        if inj is None or not inj.should_crash(name, node_id):
+            return
+        cb = self.on_crash
+        if cb is not None:
+            cb(node_id)
+        else:
+            self.set_down(node_id)
+        raise NodeDown(f"{node_id} (crashed at {name})")
 
     # -- membership -------------------------------------------------------
     def register_endpoint(self, node_id: str, obj) -> None:
@@ -141,9 +194,17 @@ class Transport:
     # -- RPC ---------------------------------------------------------------
     def rpc(self, dst: str, method: str, *args, **kwargs):
         self._check(dst)
+        inj = self.injector
+        act = inj.rpc_action(dst, method) if inj is not None else None
+        if act == "drop":
+            raise RpcTimeout(f"rpc {method}@{dst} (injected drop)")
         nbytes = sum(payload_bytes(a) for a in args)
         self.stats.account(dst, nbytes + 64, "rpc")  # 64B header model
         result = getattr(self._endpoints[dst], method)(*args, **kwargs)
+        if act == "dup":
+            # retransmitted duplicate: the receiver sees the call twice
+            self.stats.account(dst, nbytes + 64, "rpc")
+            result = getattr(self._endpoints[dst], method)(*args, **kwargs)
         resp = payload_bytes(result)
         if resp:
             self.stats.respond(dst, resp)
@@ -160,8 +221,16 @@ class Transport:
         sink = self._regions.get((dst, region_id))
         if sink is None:
             raise KeyError(f"region {region_id} not registered on {dst}")
+        inj = self.injector
+        act = inj.write_action(dst, region_id) if inj is not None else None
+        if act == "drop":
+            raise RpcTimeout(f"write {region_id}@{dst} (injected drop)")
         self.stats.account(dst, len(data), "write")
         sink.write(offset, data)
+        if act == "dup":
+            # duplicate delivery: receivers dedup by seqno (ReplicaSlot)
+            self.stats.account(dst, len(data), "write")
+            sink.write(offset, data)
 
     def one_sided_read(self, dst: str, region_id: str, offset: int,
                        size: int, rkey: int = None) -> bytes:
@@ -178,6 +247,12 @@ class Transport:
         sink = self._regions.get((dst, region_id))
         if sink is None:
             raise KeyError(f"region {region_id} not registered on {dst}")
+        inj = self.injector
+        act = inj.read_action(dst, region_id) if inj is not None else None
+        if act == "drop":
+            raise RpcTimeout(f"read {region_id}@{dst} (injected drop)")
+        if act == "stale":
+            raise StaleHandle(f"{region_id}@{dst} (injected)")
         if rkey is not None and getattr(sink, "rkey", None) != rkey:
             raise StaleHandle(f"{region_id}@{dst} rkey={rkey}")
         self.stats.bytes_read += size

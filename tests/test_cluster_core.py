@@ -72,3 +72,97 @@ def test_journal_recovery(tmp_path):
     cm2 = ClusterManager(p)
     assert cm2.subtree_chains["/"] == ["n0", "n1"]
     assert cm2.epoch == 1
+
+
+def test_manager_grants_survive_restart(tmp_path):
+    """A cluster-manager restart must not forget lease delegation:
+    otherwise a second node is handed a subtree the first still serves
+    leases for."""
+    p = str(tmp_path / "cm.journal")
+    t = [0.0]
+    cm = ClusterManager(p, clock=lambda: t[0])
+    cm.register("n0")
+    cm.register("n1")
+    assert cm.manager_for("/a", "n0") == "n0"
+    t[0] = 1.0
+    cm2 = ClusterManager(p, clock=lambda: t[0])
+    cm2.register("n0")
+    cm2.register("n1")
+    # within TTL: the replayed grant is sticky for the original holder
+    assert cm2.manager_for("/a", "n1") == "n0"
+
+
+def test_manager_grants_ttl_expire_on_recovery(tmp_path):
+    p = str(tmp_path / "cm.journal")
+    t = [0.0]
+    cm = ClusterManager(p, clock=lambda: t[0])
+    cm.register("n0")
+    cm.register("n1")
+    assert cm.manager_for("/a", "n0") == "n0"
+    t[0] = 6.0  # > MANAGER_TTL while the manager was down
+    cm2 = ClusterManager(p, clock=lambda: t[0])
+    cm2.register("n0")
+    cm2.register("n1")
+    assert "/a" not in cm2.managers  # stale grant dropped on replay
+    assert cm2.manager_for("/a", "n1") == "n1"
+
+
+def test_manager_deletion_journaled_on_failure(tmp_path):
+    """A dead node's delegations are revoked durably: after a restart
+    the journal must replay the deletion, not resurrect the grant."""
+    p = str(tmp_path / "cm.journal")
+    t = [0.0]
+    cm = ClusterManager(p, clock=lambda: t[0])
+    cm.register("n0")
+    cm.register("n1")
+    cm.set_chain("/", ["n0", "n1"])
+    assert cm.manager_for("/a", "n0") == "n0"
+    cm.on_node_failed("n0")
+    t[0] = 1.0  # still within TTL: only the deletion keeps it out
+    cm2 = ClusterManager(p, clock=lambda: t[0])
+    cm2.register("n0")
+    cm2.register("n1")
+    assert "/a" not in cm2.managers
+    assert cm2.manager_for("/a", "n1") == "n1"
+
+
+def test_on_node_failed_idempotent():
+    cm = ClusterManager()
+    for n in ("n0", "n1", "n2"):
+        cm.register(n)
+    cm.set_chain("/", ["n0", "n1"], reserve=["n2"])
+    cm.on_node_failed("n0")
+    assert cm.epoch == 1
+    assert cm.chain_for("/x") == ["n1", "n2"]
+    # watcher tick + explicit report + repeated tick: handled once
+    cm.on_node_failed("n0")
+    cm.check_failures(0.5)
+    assert cm.epoch == 1
+    assert cm.chain_for("/x") == ["n1", "n2"]
+    # rejoin clears the handled mark: a genuine re-failure counts
+    cm.on_node_recovered("n0")
+    cm.on_node_failed("n0")
+    assert cm.epoch == 2
+
+
+def test_dirty_since_cached_and_invalidated():
+    cm = ClusterManager()
+    cm.register("n0")
+    cm.mark_dirty("/a")
+    cm.bump_epoch()
+    cm.mark_dirty("/b")
+    assert cm.dirty_since(0) == {"/a", "/b"}
+    # the closed-epoch union is cached; the live epoch still shows
+    # through (no stale snapshot of the growing set)
+    cm.mark_dirty("/c")
+    assert cm.dirty_since(0) == {"/a", "/b", "/c"}
+    assert 0 in cm._dirty_suffix_cache
+    assert cm._dirty_suffix_cache[0] == {"/a"}
+    # a bump freezes the live set: the cache must be rebuilt to see it
+    cm.bump_epoch()
+    assert cm._dirty_suffix_cache == {}
+    assert cm.dirty_since(0) == {"/a", "/b", "/c"}
+    assert cm._dirty_suffix_cache[0] == {"/a", "/b", "/c"}
+    # gc drops retired epochs from cache and union alike
+    cm.gc_epochs(1)
+    assert cm.dirty_since(0) == {"/b", "/c"}

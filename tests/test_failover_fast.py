@@ -1,0 +1,151 @@
+"""Fast warm-replica promotion (§3.5, PR 6): serve immediately off the
+slot mirror, replay only the undigested suffix in the background,
+continue seqnos, migrate leases via the epoch bump."""
+import pytest
+
+from repro.core import AssiseCluster
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=4, replication=2,
+                      n_reserve=1)
+    yield c
+    c.close()
+
+
+def test_fast_promotion_serves_acked_state_immediately(cluster):
+    ls = cluster.open_process("p")
+    ls.put("/fp/digested", b"old")
+    ls.digest()
+    ls.put("/fp/dirty", b"tail")
+    ls.fsync()  # acked but undigested: lives in the slot mirrors
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")  # fast=True default
+    assert ls2.sfs.node_id != "node0"
+    # both tiers answer before the background replay has settled
+    assert ls2.get("/fp/digested") == b"old"
+    assert ls2.get("/fp/dirty") == b"tail"
+    assert ls2.sfs.stats["promotions"] == 1
+    # background replay lands the suffix in the hot area eventually
+    ls2.sfs.drain_digests()
+    assert ls2.sfs.hot.get("/fp/dirty") == b"tail"
+
+
+def test_promotion_critical_path_does_not_digest_inline(cluster):
+    """The whole point: promotion queues the slot replay instead of
+    digesting on the critical path."""
+    ls = cluster.open_process("p")
+    for i in range(50):
+        ls.put(f"/pc/{i}", bytes([i]) * 64)
+    ls.fsync()
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    target = cluster.cm.chain_for("/pc/0")[0]
+    sfs = cluster.sharedfs[target]
+    digests_before = sfs.stats["digests"]
+    slot_len_before = len(sfs.slots["p"].entries)
+    assert slot_len_before > 0
+    acked = sfs.promote_dead_process("p")
+    assert acked == sfs.slots["p"].acked_seqno
+    # not digested synchronously (the worker may or may not have run
+    # yet; the *call* must not have applied anything inline)
+    assert sfs.stats["digests"] >= digests_before
+    sfs.drain_digests()
+    assert len(sfs.slots["p"].entries) == 0  # replay settled
+    assert sfs.stats["digests"] == digests_before + 1
+
+
+def test_settle_barrier_orders_replay_before_new_digest(cluster):
+    """A digest by the successor must not be overwritten by the queued
+    replay of the predecessor's older slot entries."""
+    ls = cluster.open_process("p")
+    ls.put("/sb/x", b"v1")
+    ls.fsync()
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")
+    ls2.put("/sb/x", b"v2")
+    ls2.fsync()
+    ls2.digest()  # settles behind the replay, then applies v2
+    ls2.sfs.drain_digests()
+    assert ls2.sfs.hot.get("/sb/x") == b"v2"
+    assert ls2.get("/sb/x") == b"v2"
+    # every surviving replica converged on v2
+    for nid in ls2.chain.chain:
+        found, v = cluster.sharedfs[nid].read_any("/sb/x")
+        assert (found, v) == (True, b"v2")
+
+
+def test_fast_failover_then_local_process_recovery(cluster):
+    """The successor crashes as a *process* and recovers on the same
+    node: the persisted seqno continuation must hold through the local
+    log recovery (no replication silently dropped)."""
+    ls = cluster.open_process("p")
+    ls.put("/lr2/a", b"a1")
+    ls.fsync()
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")
+    node = ls2.sfs.node_id
+    ls2.put("/lr2/b", b"b1")
+    ls2.log.persist()
+    cluster.kill_process(ls2)
+    ls3 = cluster.recover_process_local("p", node)
+    assert ls3.get("/lr2/a") == b"a1"
+    assert ls3.get("/lr2/b") == b"b1"
+    ls3.put("/lr2/c", b"c1")
+    ls3.fsync()
+    for nid in ls3.chain.chain:
+        assert cluster.sharedfs[nid].read_any("/lr2/c") == (True, b"c1")
+
+
+def test_lease_migration_via_epoch_bump(cluster):
+    """A process on a surviving node holds a cached lease granted
+    before the failure; after the epoch bump its next op re-acquires
+    from the current manager instead of trusting the stale grant."""
+    writer = cluster.open_process("p", "node0")
+    writer.put("/lm/k", b"w1")
+    writer.fsync()
+    other = cluster.open_process("q", "node1")
+    assert other.get("/lm/k") == b"w1"
+    acquires_before = other.stats["lease_acquires"]
+    assert other.get("/lm/k") == b"w1"  # cached: no new acquire
+    assert other.stats["lease_acquires"] == acquires_before
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    # epoch bumped: the cached lease must not be trusted anymore
+    other.get("/lm/k")
+    assert other.stats["lease_acquires"] > acquires_before
+
+
+def test_legacy_slow_path_still_correct(cluster):
+    ls = cluster.open_process("p")
+    ls.put("/sl/a", b"acked")
+    ls.fsync()
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p", fast=False)
+    assert ls2.get("/sl/a") == b"acked"
+    # slow path digested inline: the slot is already empty
+    assert len(ls2.sfs.slots["p"].entries) == 0
+    ls2.put("/sl/b", b"newer")
+    ls2.fsync()  # seqno continuation holds on the slow path too
+    for nid in ls2.chain.chain:
+        assert cluster.sharedfs[nid].read_any("/sl/b") == (True, b"newer")
+
+
+def test_double_detection_single_epoch_bump(cluster):
+    cluster.open_process("p")
+    epoch0 = cluster.cm.epoch
+    cluster.kill_node("node0")
+    assert cluster.detect_failures_now() == ["node0"]
+    assert cluster.detect_failures_now() == []  # second watcher tick
+    cluster.cm.on_node_failed("node0")  # direct repeated report
+    assert cluster.cm.epoch == epoch0 + 1
+    # after a genuine rejoin, a fresh failure is handled again
+    cluster.restart_node("node0")
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    assert cluster.cm.epoch == epoch0 + 2

@@ -1,0 +1,246 @@
+"""Fault-injection layer: scheduled/seeded schedules, retry helper,
+idempotency under duplicate delivery, and named crash points (PR 6)."""
+import pytest
+
+from repro.core import AssiseCluster, Fault, FaultInjector, RpcTimeout
+from repro.core.transport import NodeDown, StaleHandle, with_retries
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=3, replication=2,
+                      n_reserve=1)
+    yield c
+    c.close()
+
+
+# -- injector unit behavior ---------------------------------------------------
+
+def test_scheduled_fault_fires_on_nth_matching_call():
+    inj = FaultInjector([Fault("drop", op="rpc", dst="node1",
+                               method="chain_continue", after=2, count=1)])
+    acts = [inj.rpc_action("node1", "chain_continue") for _ in range(5)]
+    assert acts == [None, None, "drop", None, None]
+    # non-matching calls don't advance the schedule
+    assert inj.rpc_action("node2", "chain_continue") is None
+    assert inj.rpc_action("node1", "locate") is None
+    assert inj.injected["drop"] == 1
+
+
+def test_seeded_random_schedule_is_deterministic():
+    seq1 = [FaultInjector(seed=7, p_drop=0.3, p_dup=0.2)
+            .rpc_action("n", "m") for _ in range(1)]
+    a = FaultInjector(seed=7, p_drop=0.3, p_dup=0.2, p_delay=0.2)
+    b = FaultInjector(seed=7, p_drop=0.3, p_dup=0.2, p_delay=0.2)
+    sa = [a.rpc_action("n", "m") for _ in range(200)]
+    sb = [b.rpc_action("n", "m") for _ in range(200)]
+    assert sa == sb
+    assert any(sa), "some faults must fire at these probabilities"
+    del seq1
+
+
+def test_random_drops_never_hit_same_site_twice_in_a_row():
+    inj = FaultInjector(seed=3, p_drop=0.9)
+    prev_dropped = False
+    for _ in range(300):
+        act = inj.rpc_action("n1", "frob")
+        if prev_dropped:
+            assert act != "drop", "retry of a dropped call dropped again"
+        prev_dropped = act == "drop"
+
+
+def test_stale_only_on_reads():
+    inj = FaultInjector(seed=1, p_stale=1.0)
+    assert inj.read_action("n", "area/hot") == "stale"
+    assert inj.rpc_action("n", "m") is None
+    assert inj.write_action("n", "slot/p") is None
+
+
+def test_with_retries_bounded_and_not_retrying_nodedown():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RpcTimeout("x")
+        return "ok"
+
+    assert with_retries(flaky) == "ok"
+    assert calls["n"] == 3
+
+    def always():
+        raise RpcTimeout("x")
+
+    with pytest.raises(RpcTimeout):
+        with_retries(always, attempts=3, backoff_s=0)
+
+    def dead():
+        calls["n"] += 1
+        raise NodeDown("n9")
+
+    calls["n"] = 0
+    with pytest.raises(NodeDown):
+        with_retries(dead)
+    assert calls["n"] == 1  # no retry storm at a dead peer
+
+
+# -- transport integration ---------------------------------------------------
+
+def test_dropped_chain_rpc_is_retried_transparently(cluster):
+    ls = cluster.open_process("p")
+    inj = cluster.inject_faults(
+        [Fault("drop", op="rpc", method="chain_continue", count=1)])
+    ls.put("/ft/a", b"v1")
+    ls.fsync()  # first chain_continue drops; retry must succeed
+    assert inj.injected["drop"] == 1
+    assert cluster.transport.stats.retries >= 1
+    for nid in ls.chain.chain:
+        assert cluster.sharedfs[nid].read_any("/ft/a") == (True, b"v1")
+
+
+def test_duplicate_delivery_is_idempotent(cluster):
+    ls = cluster.open_process("p")
+    cluster.inject_faults(
+        [Fault("dup", op="write", method="slot/p", count=-1),
+         Fault("dup", op="rpc", method="chain_continue", count=-1)])
+    ls.put("/dup/a", b"first")
+    ls.fsync()
+    ls.put("/dup/a", b"second")
+    ls.put("/dup/b", b"other")
+    ls.fsync()
+    cluster.clear_faults()
+    for nid in ls.chain.chain:
+        slot = cluster.sharedfs[nid].slots["p"]
+        seqnos = [e.seqno for e in slot.entries]
+        assert seqnos == sorted(set(seqnos)), "duplicate entries ingested"
+        assert cluster.sharedfs[nid].read_any("/dup/a") == (True, b"second")
+        assert cluster.sharedfs[nid].read_any("/dup/b") == (True, b"other")
+    ls.digest()
+    assert ls.get("/dup/a") == b"second"
+
+
+def test_injected_stale_handle_falls_back_to_ranged_rpc(cluster):
+    # unreplicated writer: the value lives only on node0, so the reader
+    # must cross the wire via locate + one-sided read
+    ls = cluster.open_process("p", "node0", chain=["node0"])
+    ls.put("/st/a", b"x" * 64)
+    ls.digest()
+    reader = cluster.open_process("q", "node1")
+    cluster.inject_faults([Fault("stale", op="read", count=-1)])
+    assert reader.get("/st/a") == b"x" * 64
+    assert reader.stats["stale_handles"] >= 1
+
+
+def test_injected_read_drop_is_retried(cluster):
+    ls = cluster.open_process("p", "node0", chain=["node0"])
+    ls.put("/rd/a", b"y" * 32)
+    ls.digest()
+    reader = cluster.open_process("q", "node1")
+    inj = cluster.inject_faults([Fault("drop", op="read", count=1)])
+    assert reader.get("/rd/a") == b"y" * 32
+    assert inj.injected["drop"] == 1
+
+
+def test_delay_faults_are_accounted_not_fatal(cluster):
+    ls = cluster.open_process("p")
+    inj = cluster.inject_faults([Fault("delay", op="rpc", count=-1)])
+    ls.put("/dl/a", b"v")
+    ls.fsync()
+    assert ls.get("/dl/a") == b"v"
+    assert inj.injected["delay"] >= 1
+
+
+# -- named crash points -------------------------------------------------------
+
+def test_crash_mid_chain_replication(cluster):
+    ls = cluster.open_process("p")
+    ls.put("/cp/a", b"acked")
+    ls.fsync()
+    cluster.inject_faults([Fault("crash", op="chain.mid", dst="node0")])
+    ls.put("/cp/b", b"doomed")
+    with pytest.raises(NodeDown):
+        ls.fsync()  # writer dies between slot write and continue RPC
+    assert "node0" in cluster.dead_nodes
+    cluster.clear_faults()
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")
+    assert ls2.get("/cp/a") == b"acked"  # acked prefix survives
+    # /cp/b reached the head's slot but was never acked: the failover
+    # target (the head) may serve it — prefix semantics allow either,
+    # but never a torn value
+    assert ls2.get("/cp/b") in (None, b"doomed")
+
+
+def test_crash_mid_seal(cluster):
+    ls = cluster.open_process("p")
+    ls.put("/cs/a", b"acked")
+    ls.fsync()
+    cluster.inject_faults([Fault("crash", op="seal.mid", dst="node0")])
+    ls.put("/cs/b", b"sealed-only")
+    with pytest.raises(NodeDown):
+        ls.seal_and_digest()
+    cluster.clear_faults()
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")
+    assert ls2.get("/cs/a") == b"acked"
+    assert ls2.get("/cs/b") is None  # sealed-but-unreplicated dies
+
+
+def test_crash_mid_digest_is_idempotent_on_refire(cluster):
+    """Replica dies after applying its slot but before truncating: the
+    re-digest after restart must not corrupt or resurrect anything."""
+    ls = cluster.open_process("p")
+    ls.put("/cd/a", b"v1")
+    ls.fsync()
+    cluster.inject_faults([Fault("crash", op="digest.mid", dst="node1")])
+    with pytest.raises(NodeDown):
+        ls.digest()  # fan-out digest kills node1 mid-apply
+    assert "node1" in cluster.dead_nodes
+    cluster.clear_faults()
+    cluster.detect_failures_now()
+    sfs1 = cluster.restart_node("node1")
+    # slot survived un-truncated; re-digest applies the same prefix again
+    slot = sfs1.slots.get("p") or sfs1.slot_for("p")
+    sfs1.digest_slot("p", slot.acked_seqno)
+    assert sfs1.read_any("/cd/a") == (True, b"v1")
+
+
+def test_crash_mid_lease_revoke(cluster):
+    ls = cluster.open_process("p", "node0")
+    ls.put("/lr/a", b"acked")
+    ls.fsync()
+    ls.put("/lr/b", b"unflushed")
+    reader = cluster.open_process("q", "node1")
+    cluster.inject_faults([Fault("crash", op="lease.revoke",
+                                 dst="node0")])
+    # the reader's lease acquire triggers revocation of p's write lease;
+    # p's node dies before the grace flush
+    with pytest.raises(NodeDown):
+        reader.get("/lr/a")
+    cluster.clear_faults()
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")
+    assert ls2.get("/lr/a") == b"acked"
+    assert ls2.get("/lr/b") is None  # never replicated before the death
+    # the reader recovers too (epoch bump migrated its lease state)
+    assert reader.get("/lr/a") == b"acked"
+
+
+def test_failover_seqno_continuation(cluster):
+    """Post-failover writes must replicate: the successor's seqnos
+    continue past the dead process's acked watermark, otherwise the
+    replicas' dedup silently drops everything it ever fsyncs."""
+    ls = cluster.open_process("p")
+    for i in range(5):
+        ls.put(f"/sc/{i}", b"old")
+    ls.fsync()
+    acked_before = max(cluster.sharedfs[n].slots["p"].acked_seqno
+                      for n in ls.chain.chain)
+    cluster.kill_node("node0")
+    cluster.detect_failures_now()
+    ls2 = cluster.failover_process("p")
+    assert ls2.log.last_seqno >= acked_before
+    ls2.put("/sc/new", b"new")
+    ls2.fsync()  # would be silently dropped without continuation
+    for nid in ls2.chain.chain:
+        assert cluster.sharedfs[nid].read_any("/sc/new") == (True, b"new")
