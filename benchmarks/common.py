@@ -17,13 +17,16 @@ ROWS = []
 
 def row(name: str, us_per_call: float, derived: str = "", *,
         p50: float = None, p99: float = None, p999: float = None,
-        wire_bytes: float = None):
+        wire_bytes: float = None, ops_per_s: float = None):
     """Record one benchmark row. Percentile columns are optional: tail-
     latency rows (fig13.*) carry p50/p99/p999 alongside the mean so the
     perf-trajectory guard (benchmarks/compare.py) can diff tails too.
     ``wire_bytes`` (per-op transport bytes, fig14.*) is deterministic —
     the guard's ``--wire-bytes-max-ratio`` catches a regression back to
-    whole-blob remote reads independent of machine speed."""
+    whole-blob remote reads independent of machine speed. ``ops_per_s``
+    is AGGREGATE throughput for multi-writer rows (fig17.*): under
+    concurrency it is not 1e6/us_per_call, so the scaling guard
+    (``--writer-scaling-min``) reads this column, not the mean."""
     r = {"name": name, "us_per_call": us_per_call, "derived": derived}
     tail = ""
     if p50 is not None:
@@ -32,6 +35,9 @@ def row(name: str, us_per_call: float, derived: str = "", *,
     if wire_bytes is not None:
         r["wire_bytes"] = wire_bytes
         tail += f",wire_B/op={wire_bytes:.0f}"
+    if ops_per_s is not None:
+        r["ops_per_s"] = ops_per_s
+        tail += f",ops/s={ops_per_s:.0f}"
     ROWS.append(r)
     print(f"{name},{us_per_call:.2f},{derived}{tail}", flush=True)
 

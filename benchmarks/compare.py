@@ -44,7 +44,8 @@ def main() -> int:
                     help="compare the two highest-numbered BENCH_*.json "
                          "in the repo root")
     ap.add_argument("--prefixes",
-                    default="fig10.,table1.,fig12.,fig13.,fig14.,fig15.",
+                    default="fig10.,table1.,fig12.,fig13.,fig14.,fig15.,"
+                            "fig17.",
                     help="comma-separated row-name prefixes to guard")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/old us_per_call exceeds this")
@@ -57,6 +58,16 @@ def main() -> int:
     ap.add_argument("--tail-max-ratio", type=float, default=4.0,
                     help="fail when new/old p99 or p999 exceeds this "
                          "(tail percentiles are noisier than means)")
+    ap.add_argument("--writer-scaling-min", type=float, default=3.0,
+                    help="writer-scaling gate (fig17): fail when the "
+                         "NEW dump's 8-writer 4KB-put aggregate "
+                         "ops_per_s is below this multiple of its "
+                         "1-writer number, when the 8-writer aggregate "
+                         "regressed more than 2x vs the OLD dump, or "
+                         "when the group path's 1-writer p50 exceeds "
+                         "1.2x the pre-group (group_commit=False) p50. "
+                         "Pass 0 to disable. Skipped when the NEW dump "
+                         "has no fig17 rows.")
     ap.add_argument("--wire-bytes-max-ratio", type=float, default=1.5,
                     help="fail when new/old wire_bytes exceeds this — "
                          "wire bytes are deterministic transport "
@@ -117,6 +128,35 @@ def main() -> int:
                   f"({ratio:.2f}x){flag}")
             if flag:
                 regressed.append(f"{name}[{metric}]")
+    # -- fig17 writer-scaling gate (within-file + cross-snapshot) ----------
+    W1, W8 = "fig17.assise_put4k_w1", "fig17.assise_put4k_w8"
+    NOG = "fig17.assise_put4k_w1_nogroup"
+    if args.writer_scaling_min > 0 and W1 in new and W8 in new:
+        one = float(new[W1]["ops_per_s"])
+        eight = float(new[W8]["ops_per_s"])
+        scale = eight / one
+        flag = " REGRESSION" if scale < args.writer_scaling_min else ""
+        print(f"  fig17 scaling: w8 {eight:.0f} / w1 {one:.0f} ops/s = "
+              f"{scale:.2f}x (min {args.writer_scaling_min}x){flag}")
+        if flag:
+            regressed.append("fig17.writer_scaling")
+        if NOG in new:
+            p50 = float(new[W1]["p50"])
+            ref = float(new[NOG]["p50"])
+            flag = " REGRESSION" if p50 > 1.2 * ref else ""
+            print(f"  fig17 lone-writer p50: group {p50:.0f}us vs "
+                  f"pre-group {ref:.0f}us ({p50 / ref:.2f}x, max "
+                  f"1.2x){flag}")
+            if flag:
+                regressed.append("fig17.lone_writer_p50")
+        if W8 in old:
+            prev = float(old[W8]["ops_per_s"])
+            flag = " REGRESSION" if eight < prev / 2 else ""
+            print(f"  fig17 w8 trajectory: {prev:.0f} -> {eight:.0f} "
+                  f"ops/s (min half of previous){flag}")
+            if flag:
+                regressed.append("fig17.w8_trajectory")
+
     print(f"compare: {compared} rows compared, {missing} missing, "
           f"{len(regressed)} regressed")
     if regressed:

@@ -32,13 +32,19 @@ class AssiseCluster:
                  mode: str = "pessimistic", hot_capacity: int = 1 << 30,
                  log_capacity: int = 1 << 30,
                  dram_capacity: int = 2 << 30,
-                 fsync_data: bool = False, clock=time.monotonic):
+                 fsync_data: bool = False, clock=time.monotonic,
+                 group_commit: bool = False, group_window_s: float = 0.0,
+                 digest_workers: int = 1, digest_shards: int = 1):
         assert replication + n_reserve <= n_nodes
         self.root = root_dir
         self.mode = mode
         self.log_capacity = log_capacity
         self.dram_capacity = dram_capacity
         self.fsync_data = fsync_data
+        self.group_commit = group_commit
+        self.group_window_s = group_window_s
+        self.digest_workers = digest_workers
+        self.digest_shards = digest_shards
         os.makedirs(root_dir, exist_ok=True)
         self.transport = Transport()
         self.cm = ClusterManager(os.path.join(root_dir, "cm.journal"),
@@ -52,7 +58,10 @@ class AssiseCluster:
                 nid, os.path.join(root_dir, nid), self.cm, self.transport,
                 hot_capacity=hot_capacity,
                 is_reserve=(replication <= i < replication + n_reserve),
-                fsync_data=fsync_data)
+                fsync_data=fsync_data, group_commit=group_commit,
+                group_window_s=group_window_s,
+                digest_workers=digest_workers,
+                digest_shards=digest_shards)
         chain = self.node_ids[:replication]
         reserve = self.node_ids[replication:replication + n_reserve]
         self.cm.set_chain("/", chain, reserve)
@@ -211,7 +220,11 @@ class AssiseCluster:
         self.transport.set_down(node_id, False)
         sfs = SharedFS(node_id, os.path.join(self.root, node_id), self.cm,
                        self.transport, hot_capacity=self.hot_capacity,
-                       fsync_data=self.fsync_data)
+                       fsync_data=self.fsync_data,
+                       group_commit=self.group_commit,
+                       group_window_s=self.group_window_s,
+                       digest_workers=self.digest_workers,
+                       digest_shards=self.digest_shards)
         self.sharedfs[node_id] = sfs
         sfs.invalidate_since(epoch_at_death)
         self.cm.on_node_recovered(node_id)

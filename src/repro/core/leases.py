@@ -53,20 +53,48 @@ class Lease:
 class LeaseTable:
     """Grant table with conflict detection + expiry.
 
-    Indexed by holder and by lease path so the hot-path queries stop
-    scanning every grant: ``find`` walks only the holder's own leases
-    (typically one or two), and ``conflicting`` probes the exact path +
-    its ancestors in the path index, then prefix-scans only the
-    *distinct lease paths* for descendants.
+    Every hot-path query is indexed — a busy writer grants one lease
+    per path it touches, so the table reaches tens of thousands of live
+    grants and anything that scans them all turns the put path O(n²)
+    over a run:
+
+    - ``find``/``conflicting`` probe the exact path plus its ancestors
+      in ``by_path`` (O(depth), not O(grants));
+    - descendants come from ``children``, a directory-tree index that
+      visits only the lease paths actually under the probe point, not
+      every distinct lease path in the table;
+    - expiry sweeps are throttled to one full scan per ``_SCAN_EVERY``
+      of lease-clock time — queries filter on ``valid()`` themselves,
+      so the sweep is garbage collection, not correctness.
     """
 
     leases: Dict[int, Lease] = field(default_factory=dict)
     by_holder: Dict[str, Dict[int, Lease]] = field(default_factory=dict)
     by_path: Dict[str, Dict[int, Lease]] = field(default_factory=dict)
+    # directory index: node path -> child node paths that lead to (or
+    # are) live lease paths. Lets the descendant probe walk just the
+    # subtree under a path.
+    children: Dict[str, set] = field(default_factory=dict)
+    _next_scan: float = float("-inf")
+
+    _SCAN_EVERY = 1.0
+
+    @staticmethod
+    def _parent(path: str) -> Optional[str]:
+        if path == "/":
+            return None
+        return path.rsplit("/", 1)[0] or "/"
 
     def _index(self, l: Lease) -> None:
         self.by_holder.setdefault(l.holder, {})[l.id] = l
         self.by_path.setdefault(l.path, {})[l.id] = l
+        node, parent = l.path, self._parent(l.path)
+        while parent is not None:
+            kids = self.children.setdefault(parent, set())
+            if node in kids:
+                break  # the rest of the chain is already linked
+            kids.add(node)
+            node, parent = parent, self._parent(parent)
 
     def _unindex(self, l: Lease) -> None:
         for m, key in ((self.by_holder, l.holder), (self.by_path, l.path)):
@@ -75,6 +103,18 @@ class LeaseTable:
                 d.pop(l.id, None)
                 if not d:
                     del m[key]
+        # prune now-empty branches of the directory index
+        node = l.path
+        while node != "/" and node not in self.by_path \
+                and not self.children.get(node):
+            self.children.pop(node, None)
+            parent = self._parent(node)
+            if parent is None:
+                break
+            kids = self.children.get(parent)
+            if kids is not None:
+                kids.discard(node)
+            node = parent
 
     def _drop(self, l: Lease) -> None:
         self.leases.pop(l.id, None)
@@ -86,9 +126,14 @@ class LeaseTable:
             self._drop(l)
         return dead
 
+    def _maybe_expire(self, now: float) -> None:
+        if now >= self._next_scan:
+            self._next_scan = now + self._SCAN_EVERY
+            self.expire(now)
+
     def conflicting(self, path: str, mode: str, now: float,
                     exclude_holder: Optional[str] = None) -> List[Lease]:
-        self.expire(now)
+        self._maybe_expire(now)
         cands: Dict[int, Lease] = {}
         probe = path  # leases whose path covers ours: exact + ancestors
         while True:
@@ -96,20 +141,26 @@ class LeaseTable:
             if probe == "/":
                 break
             probe = probe.rsplit("/", 1)[0] or "/"
-        pre = path.rstrip("/") + "/"  # leases we would cover: descendants
-        for p, d in self.by_path.items():
-            if p.startswith(pre):
-                cands.update(d)
+        # leases we would cover: walk only the subtree under path
+        stack = list(self.children.get(path, ()))
+        while stack:
+            node = stack.pop()
+            cands.update(self.by_path.get(node, {}))
+            stack.extend(self.children.get(node, ()))
         return [l for l in cands.values()
-                if l.holder != exclude_holder
+                if l.holder != exclude_holder and l.valid(now)
                 and conflicts(l.path, l.mode, path, mode)]
 
     def find(self, holder: str, path: str, mode: str, now: float):
-        for l in self.by_holder.get(holder, {}).values():
-            if (l.valid(now) and covers(l.path, path)
-                    and (l.mode == WRITE or mode == READ)):
-                return l
-        return None
+        probe = path  # a covering lease must sit at path or an ancestor
+        while True:
+            for l in self.by_path.get(probe, {}).values():
+                if (l.holder == holder and l.valid(now)
+                        and (l.mode == WRITE or mode == READ)):
+                    return l
+            if probe == "/":
+                return None
+            probe = probe.rsplit("/", 1)[0] or "/"
 
     def grant(self, path: str, mode: str, holder: str, now: float,
               ttl: float = LEASE_TTL) -> Lease:
@@ -146,17 +197,29 @@ class LeaseManager:
         self.transfers = 0  # lease handoffs (logged; paper: replicated)
 
     def acquire(self, holder: str, path: str, mode: str, now: float,
-                ttl: float = LEASE_TTL) -> Lease:
+                ttl: float = LEASE_TTL, subtree: str = "/") -> Lease:
         existing = self.table.find(holder, path, mode, now)
         if existing is not None:
             existing.expires_at = now + ttl  # refresh
             return existing
-        for l in self.table.conflicting(path, mode, now,
+        target = path
+        if mode == WRITE and subtree not in ("", "/") \
+                and covers(subtree, path) \
+                and not self.table.conflicting(subtree, mode, now,
+                                               exclude_holder=holder):
+            # subtree widening (paper §3.3 hierarchical leases): the
+            # holder declared this subtree as its working set and nobody
+            # else holds anything under it — grant the whole subtree so
+            # every further path below it is a holder-side cache hit
+            # instead of a manager round trip per path. Contention
+            # later revokes the wide grant like any other lease.
+            target = subtree
+        for l in self.table.conflicting(target, mode, now,
                                         exclude_holder=holder):
             self.revoke_cb(l.holder, l.path)  # grace: flush + handoff
             self.table.release(l.id)
             self.transfers += 1
-        return self.table.grant(path, mode, holder, now, ttl)
+        return self.table.grant(target, mode, holder, now, ttl)
 
     def release_all(self, holder: str) -> int:
         return self.table.release_holder(holder)

@@ -224,6 +224,14 @@ class UpdateLog:
             if self.fsync_data:
                 os.fsync(self._f.fileno())
 
+    def flush_to_os(self) -> None:
+        """Flush buffered appends to the OS *without* forcing them to
+        the persistence domain — the group-commit path skips the
+        per-log fsync because the node's commit journal makes the whole
+        batch durable with one fsync (see groupcommit.py)."""
+        with self._file_lock:
+            self._f.flush()
+
     def _apply_to_index(self, e: Entry) -> None:
         if e.op == OP_PUT:
             self.index[e.path] = e.data

@@ -24,6 +24,7 @@ from __future__ import annotations
 import bisect
 import os
 import threading
+from collections import deque
 from typing import List, Optional
 
 from repro.core.log import _HDR, _WRITE_BUF  # wire header / buffer size
@@ -159,7 +160,8 @@ class ReplicaSlot:
             return (loc[0], loc[1], self.rkey)
 
     # transport sink interface -------------------------------------------------
-    def write(self, offset: Optional[int], data: bytes) -> None:
+    def write(self, offset: Optional[int], data: bytes,
+              sync: bool = True) -> None:
         """One-sided append (RDMA WRITE). Persist + decode new entries.
 
         Idempotent by seqno: entries at or below the slot's tail (or its
@@ -167,7 +169,12 @@ class ReplicaSlot:
         write — a retried chain step after a dropped ack, or an injected
         duplicate delivery — never double-applies. Entries in one stream
         have strictly increasing seqnos, so the survivors are a byte
-        suffix of ``data``."""
+        suffix of ``data``.
+
+        ``sync=False`` flushes to the OS but skips the per-file fsync:
+        the group-commit sink calls it once per batch member and makes
+        the whole batch durable with ONE journal fsync instead (see
+        ``groupcommit.GroupSlotSink``)."""
         with self._lock:
             entries = decode_stream(data)
             tail = (self.entries[-1].seqno if self.entries
@@ -181,7 +188,7 @@ class ReplicaSlot:
                 data = data[skip:]
             self._f.write(data)
             self._f.flush()
-            if self.fsync_data:
+            if sync and self.fsync_data:
                 os.fsync(self._f.fileno())
             start = len(self._buf)
             self._buf += data
@@ -285,23 +292,144 @@ class ReplicaSlot:
 
 
 class ChainClient:
-    """Writer-side chain replication.
+    """Writer-side chain replication, with a pipelined sender.
 
     Transient wire faults (``RpcTimeout``) are absorbed by bounded
     retries — safe because ``ReplicaSlot.write`` dedups by seqno, so a
     retried one-sided write + chain_continue is idempotent end to end.
     ``NodeDown`` still surfaces: a dead replica cannot ack, and the
     caller's next op after failure detection refreshes the chain (see
-    ``LibState._check_epoch``)."""
+    ``LibState._check_epoch``).
+
+    Pipelining (``submit``/``wait_acked``): a sealed log region is
+    handed to a background sender and shipped over the chain while the
+    next region fills — the digest worker overlaps the local apply with
+    the wire time. Two watermarks track the split: ``submitted_seqno``
+    (highest seqno handed to the sender; new slices start past it) and
+    ``replicated_seqno`` (highest chain-acked seqno; fsync/dsync wait
+    only on their own watermark via ``wait_acked``). The in-flight
+    window is bounded (``window`` queued slices) so a stalled chain
+    backpressures the pipeline instead of buffering unboundedly. A
+    sender failure parks in ``_error`` and surfaces at the next
+    submit/wait; ``reset()`` (called after a chain refresh) clears it
+    and rewinds ``submitted_seqno`` so unacked ranges re-ship to the
+    repaired chain — duplicate delivery is absorbed by slot dedup."""
 
     def __init__(self, proc_id: str, chain: List[str], transport,
-                 owner: Optional[str] = None):
+                 owner: Optional[str] = None, window: int = 4):
         self.proc_id = proc_id
         self.chain = list(chain)  # replica node ids, in order (no self)
         self.transport = transport
         self.owner = owner  # writer's node id (crash-point identity)
-        self.replicated_seqno = 0
+        self.replicated_seqno = 0  # chain-acked watermark
+        self.submitted_seqno = 0   # handed to the sender (>= acked)
+        self.window = window
+        self._cv = threading.Condition()
+        self._sendq: deque = deque()  # (last_seqno, data) in seqno order
+        self._sender: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._stopped = False
 
+    # -- acked-watermark bookkeeping ---------------------------------------
+    def mark_acked(self, seqno: int) -> None:
+        """Advance both watermarks to an externally-acked seqno (group
+        commit acks whole batches at once) and wake waiters."""
+        with self._cv:
+            self.replicated_seqno = max(self.replicated_seqno, seqno)
+            self.submitted_seqno = max(self.submitted_seqno, seqno)
+            self._cv.notify_all()
+
+    def wait_acked(self, seqno: int) -> None:
+        """Block until the chain has acked through ``seqno`` — the
+        caller's own watermark, nothing newer. Raises the sender's
+        parked error if the ack can never arrive."""
+        if self.replicated_seqno >= seqno and self._error is None:
+            return  # fast path: watermark reads are GIL-atomic
+        with self._cv:
+            while self.replicated_seqno < seqno and self._error is None:
+                self._cv.wait()
+            if self._error is not None and self.replicated_seqno < seqno:
+                raise self._error
+
+    def reset(self) -> None:
+        """After a chain refresh (epoch bump / repair): drop the parked
+        error and queued slices, rewind the submitted watermark to the
+        acked one — the next replicate/submit re-ships the unacked range
+        to the new chain (receivers dedup by seqno)."""
+        with self._cv:
+            self._error = None
+            self._sendq.clear()
+            self.submitted_seqno = self.replicated_seqno
+            self._cv.notify_all()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+
+    # -- pipelined ship (sealed regions) ------------------------------------
+    def submit(self, last_seqno: int, data: bytes) -> None:
+        """Queue a pre-encoded slice ending at ``last_seqno`` for
+        asynchronous shipping; returns once queued (bounded window).
+        The caller must have computed ``data`` starting exactly at the
+        current ``submitted_seqno`` (slices must tile the stream)."""
+        if not self.chain:
+            self.mark_acked(last_seqno)
+            return
+        with self._cv:
+            while len(self._sendq) >= self.window and self._error is None:
+                self._cv.wait()
+            if self._error is not None:
+                raise self._error
+            self._sendq.append((last_seqno, data))
+            self.submitted_seqno = max(self.submitted_seqno, last_seqno)
+            self._stopped = False
+            t = self._sender
+            if t is None or not t.is_alive():
+                t = threading.Thread(target=self._sender_loop,
+                                     name=f"chainsend-{self.proc_id}",
+                                     daemon=True)
+                self._sender = t
+                t.start()
+            self._cv.notify_all()
+
+    def _sender_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._sendq and not self._stopped:
+                    self._cv.wait()
+                if not self._sendq:
+                    return  # stopped and drained
+                last, data = self._sendq[0]
+            try:
+                self._ship(last, data)
+            except BaseException as e:  # parked: surfaces at next wait
+                with self._cv:
+                    self._error = e
+                    self._sendq.clear()
+                    self._cv.notify_all()
+                return
+            with self._cv:
+                if self._sendq and self._sendq[0][0] == last:
+                    self._sendq.popleft()
+                self.replicated_seqno = max(self.replicated_seqno, last)
+                self._cv.notify_all()
+
+    def _ship(self, last_seqno: int, data: bytes) -> None:
+        head, rest = self.chain[0], self.chain[1:]
+        region = f"slot/{self.proc_id}"
+
+        def _attempt():
+            self.transport.one_sided_write(head, region, data)
+            if self.owner is not None:
+                self.transport.crashpoint("chain.mid", self.owner)
+            return self.transport.rpc(head, "chain_continue",
+                                      self.proc_id, data, rest)
+
+        ack = with_retries(_attempt, stats=self.transport.stats)
+        assert ack >= last_seqno, (ack, last_seqno)
+
+    # -- synchronous replicate (fsync/dsync path) ----------------------------
     def replicate(self, entries: List[Entry],
                   data: Optional[bytes] = None) -> int:
         """Synchronously chain-replicate; returns acked seqno.
@@ -309,14 +437,23 @@ class ChainClient:
         ``data``, when given, is the caller's pre-encoded byte range for
         ``entries`` (e.g. ``UpdateLog.encoded_since``) and is forwarded
         as-is — the zero-copy path. Without it the entries are encoded
-        here (coalesced batches have no contiguous file range)."""
+        here (coalesced batches have no contiguous file range). Any
+        pipelined slices still in flight are waited out first so the
+        wire stream stays seqno-ordered."""
         if not entries:
             return self.replicated_seqno
+        self.wait_acked(self.submitted_seqno)
         if not self.chain:
-            self.replicated_seqno = entries[-1].seqno
+            self.mark_acked(entries[-1].seqno)
             return self.replicated_seqno
         if data is None:
             data = b"".join(e.encode() for e in entries)
+        ack = self._ship_sync(entries[-1].seqno, data)
+        self.mark_acked(entries[-1].seqno)
+        assert ack >= entries[-1].seqno, (ack, entries[-1].seqno)
+        return self.replicated_seqno
+
+    def _ship_sync(self, last_seqno: int, data: bytes) -> int:
         head, rest = self.chain[0], self.chain[1:]
         region = f"slot/{self.proc_id}"
 
@@ -329,11 +466,7 @@ class ChainClient:
             return self.transport.rpc(head, "chain_continue",
                                       self.proc_id, data, rest)
 
-        ack = with_retries(_attempt, stats=self.transport.stats)
-        self.replicated_seqno = max(self.replicated_seqno,
-                                    entries[-1].seqno)
-        assert ack >= entries[-1].seqno, (ack, entries[-1].seqno)
-        return self.replicated_seqno
+        return with_retries(_attempt, stats=self.transport.stats)
 
     def digest_fanout(self, through_seqno: int) -> None:
         """Make every replica digest its slot through ``through_seqno``

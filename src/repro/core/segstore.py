@@ -556,6 +556,136 @@ class SegmentStore:
         self._read_fds.clear()
 
 
+def subtree_shard(path: str, n: int) -> int:
+    """Stable shard assignment by top-level path component: every path
+    under one subtree (the lease/digest unit) maps to one shard, so a
+    shard's lock covers all intra-subtree ordering and cross-shard
+    coordination is only ever needed for renames across subtrees."""
+    if n <= 1:
+        return 0
+    top = path.lstrip("/").split("/", 1)[0]
+    return zlib.crc32(top.encode()) % n
+
+
+class ShardedSegmentStore:
+    """N independent ``SegmentStore`` shards behind the Area interface,
+    partitioned by ``subtree_shard``. Digest workers operating on
+    different subtrees append/compact in different segment logs under
+    different locks — the parallel-digest storage layout (fig17).
+
+    Each shard lives in its own subdirectory and runs the full engine
+    (append, patch chains, compaction, one-sided ``locate``/``read``
+    with its own rkey); the facade routes by path and aggregates the
+    accounting. Capacity is enforced at the facade level (SharedFS
+    eviction uses the aggregate ``bytes``/``lru_victims``), so each
+    shard is configured unbounded. A cross-shard rename has no single
+    append-log to ride in — it materializes as get+delete+put (rare:
+    renames across subtrees cross a lease boundary anyway)."""
+
+    def __init__(self, root: str, capacity: int = 1 << 40, *,
+                 n_shards: int = 4, fsync_data: bool = False, **kw):
+        self.root = root
+        self.capacity = capacity
+        self.n_shards = max(1, n_shards)
+        self.shards = [
+            SegmentStore(os.path.join(root, f"shard-{i}"),
+                         fsync_data=fsync_data, **kw)
+            for i in range(self.n_shards)]
+
+    def shard_index(self, path: str) -> int:
+        return subtree_shard(path, self.n_shards)
+
+    def shard_for(self, path: str) -> SegmentStore:
+        return self.shards[self.shard_index(path)]
+
+    # -- routed data path ---------------------------------------------------
+    def put(self, path: str, data: bytes) -> None:
+        self.shard_for(path).put(path, data)
+
+    def patch(self, path: str, offset: int, data: bytes) -> None:
+        self.shard_for(path).patch(path, offset, data)
+
+    def get(self, path: str) -> Optional[bytes]:
+        return self.shard_for(path).get(path)
+
+    def get_range(self, path: str, offset: int,
+                  length: int) -> Optional[bytes]:
+        return self.shard_for(path).get_range(path, offset, length)
+
+    def locate(self, path: str, offset: int = 0,
+               length: Optional[int] = None):
+        return self.shard_for(path).locate(path, offset, length)
+
+    def delete(self, path: str) -> None:
+        self.shard_for(path).delete(path)
+
+    def rename(self, src: str, dst: str) -> None:
+        a, b = self.shard_for(src), self.shard_for(dst)
+        if a is b:
+            a.rename(src, dst)
+            return
+        data = a.get(src)
+        if data is None:
+            return
+        a.delete(src)
+        b.put(dst, data)
+
+    def commit(self) -> None:
+        for sh in self.shards:
+            sh.commit()
+
+    # -- queries / accounting ------------------------------------------------
+    def contains(self, path: str) -> bool:
+        return self.shard_for(path).contains(path)
+
+    def paths(self) -> List[str]:
+        out: List[str] = []
+        for sh in self.shards:
+            out.extend(sh.paths())
+        return out
+
+    @property
+    def bytes(self) -> int:
+        return sum(sh.bytes for sh in self.shards)
+
+    @property
+    def disk_bytes(self) -> int:
+        return sum(sh.disk_bytes for sh in self.shards)
+
+    @property
+    def dead_bytes(self) -> int:
+        return sum(sh.dead_bytes for sh in self.shards)
+
+    @property
+    def compactions(self) -> int:
+        return sum(sh.compactions for sh in self.shards)
+
+    def lru_victims(self, need_bytes: int) -> List[str]:
+        """Globally LRU-ordered victims against the aggregate capacity
+        (a hot shard must not force eviction while others sit cold)."""
+        items = []
+        for sh in self.shards:
+            for p, t in sh.lru.items():
+                items.append((t, p, sh.sizes.get(p, 0)))
+        items.sort()
+        out, freed = [], 0
+        for _t, p, sz in items:
+            out.append(p)
+            freed += sz
+            if self.bytes - freed <= self.capacity - need_bytes:
+                break
+        return out
+
+    def compact(self) -> None:
+        for sh in self.shards:
+            if sh.dead_bytes > 0:
+                sh.compact()
+
+    def close(self) -> None:
+        for sh in self.shards:
+            sh.close()
+
+
 class FileArea:
     """The seed's file-per-path engine (one file per value + a flushed
     manifest line per op). Kept verbatim as the benchmark baseline that

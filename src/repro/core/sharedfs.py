@@ -15,14 +15,18 @@ from __future__ import annotations
 import os
 import queue
 import threading
+import zlib
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import log as L
 from repro.core.cluster import ClusterManager
 from repro.core.extents import ExtentOverlay
+from repro.core.groupcommit import (GroupCommitCoordinator, GroupSlotSink,
+                                    frame_batch)
 from repro.core.leases import LeaseManager, READ, WRITE
 from repro.core.replication import ReplicaSlot
-from repro.core.segstore import SegmentStore
+from repro.core.segstore import (SegmentStore, ShardedSegmentStore,
+                                 subtree_shard)
 from repro.core.transport import with_retries
 
 # The segment-log engine is the Area now; the name survives for callers.
@@ -34,7 +38,9 @@ class SharedFS:
 
     def __init__(self, node_id: str, root_dir: str, cluster: ClusterManager,
                  transport, *, hot_capacity: int = 1 << 30,
-                 is_reserve: bool = False, fsync_data: bool = False):
+                 is_reserve: bool = False, fsync_data: bool = False,
+                 group_commit: bool = False, group_window_s: float = 0.0,
+                 digest_workers: int = 1, digest_shards: int = 1):
         self.node_id = node_id
         self.root = root_dir
         self.cluster = cluster
@@ -42,8 +48,16 @@ class SharedFS:
         self.is_reserve = is_reserve
         self.fsync_data = fsync_data
         area_name = "reserve" if is_reserve else "shared"
-        self.hot = Area(os.path.join(root_dir, "nvm", area_name),
-                        hot_capacity, fsync_data=fsync_data)
+        self._digest_shards = max(1, digest_shards)
+        if self._digest_shards > 1:
+            # parallel digest: the hot area splits into per-subtree
+            # segment-log shards so workers append/compact concurrently
+            self.hot = ShardedSegmentStore(
+                os.path.join(root_dir, "nvm", area_name), hot_capacity,
+                n_shards=self._digest_shards, fsync_data=fsync_data)
+        else:
+            self.hot = Area(os.path.join(root_dir, "nvm", area_name),
+                            hot_capacity, fsync_data=fsync_data)
         self.cold = Area(os.path.join(root_dir, "ssd", "cold"),
                          fsync_data=fsync_data)
         self.slots: Dict[str, ReplicaSlot] = {}
@@ -61,16 +75,35 @@ class SharedFS:
         # resolves a (path, range) to a physical extent via locate(),
         # then pulls exactly those bytes with Transport.one_sided_read —
         # no per-read server-side work, no whole-blob transfer
-        transport.register_region(node_id, "area/hot", self.hot)
+        if self._digest_shards > 1:
+            for i, sh in enumerate(self.hot.shards):
+                transport.register_region(node_id, f"area/hot/{i}", sh)
+        else:
+            transport.register_region(node_id, "area/hot", self.hot)
         transport.register_region(node_id, "area/cold", self.cold)
-        # background digest worker (paper §3.1: SharedFS digests sealed
-        # log regions while LibFS keeps appending). One thread per node
-        # daemon, started lazily; all digest application — background or
-        # writer-inline — serializes on _digest_lock.
-        self._digest_lock = threading.RLock()
-        self._digest_q: "queue.Queue" = queue.Queue()
-        self._digest_thread: Optional[threading.Thread] = None
+        # background digest workers (paper §3.1: SharedFS digests sealed
+        # log regions while LibFS keeps appending). Per-key FIFO queues:
+        # jobs sharing a routing key (e.g. one process's seals, or a
+        # promotion replay keyed by the dead proc) stay ordered, while
+        # different keys digest in parallel across the pool. Digest
+        # *application* serializes per hot-area shard (_shard_locks),
+        # with a node-wide _commit_lock around evict/commit.
+        self._digest_workers = max(1, digest_workers)
+        self._digest_qs: List["queue.Queue"] = [
+            queue.Queue() for _ in range(self._digest_workers)]
+        self._digest_threads: List[Optional[threading.Thread]] = \
+            [None] * self._digest_workers
+        self._shard_locks = [threading.RLock()
+                             for _ in range(self._digest_shards)]
+        self._commit_lock = threading.RLock()
+        self._slot_digest_locks: Dict[str, threading.RLock] = {}
+        self._locks_guard = threading.Lock()
         self._abandon = False  # node death: skip queued jobs
+        # cross-process group commit (opt-in; see groupcommit.py)
+        self.group_commit = (
+            GroupCommitCoordinator(self, window_s=group_window_s)
+            if group_commit else None)
+        self._group_sinks: Dict[str, GroupSlotSink] = {}
         transport.register_endpoint(node_id, self)
 
     # -- permissions (single administrative domain, paper §3.2) -------------
@@ -86,24 +119,31 @@ class SharedFS:
                 best, decision = len(pre), rw
         return decision[0] if mode == READ else decision[1]
 
-    # -- background digest worker (pipeline, paper §3.1) ---------------------
+    # -- background digest workers (pipeline, paper §3.1) ---------------------
     def submit_digest(self, fn: Callable[[], None],
-                      abort: Optional[Callable[[], None]] = None) -> None:
+                      abort: Optional[Callable[[], None]] = None,
+                      key: Optional[str] = None) -> None:
         """Queue background digest work; the writer returns immediately
         and keeps appending to its fresh active log region. ``abort``
         runs instead of ``fn`` if the node dies with the job still
-        queued — so waiters on the job's completion never hang."""
-        t = self._digest_thread
+        queued — so waiters on the job's completion never hang.
+        ``key`` routes to a worker queue: jobs sharing a key run FIFO
+        on one worker (ordering), distinct keys run in parallel."""
+        i = (0 if key is None
+             else zlib.crc32(key.encode()) % self._digest_workers)
+        t = self._digest_threads[i]
         if t is None or not t.is_alive():
-            t = threading.Thread(target=self._digest_loop,
-                                 name=f"digest-{self.node_id}", daemon=True)
-            self._digest_thread = t
+            t = threading.Thread(target=self._digest_loop, args=(i,),
+                                 name=f"digest-{self.node_id}-{i}",
+                                 daemon=True)
+            self._digest_threads[i] = t
             t.start()
-        self._digest_q.put((fn, abort))
+        self._digest_qs[i].put((fn, abort))
 
-    def _digest_loop(self) -> None:
+    def _digest_loop(self, i: int) -> None:
+        q = self._digest_qs[i]
         while True:
-            item = self._digest_q.get()
+            item = q.get()
             try:
                 if item is None:
                     return
@@ -114,28 +154,45 @@ class SharedFS:
                 elif abort is not None:
                     abort()
             finally:
-                self._digest_q.task_done()
+                q.task_done()
 
     def drain_digests(self) -> None:
         """Barrier: block until every queued digest job has completed."""
-        self._digest_q.join()
+        for q in self._digest_qs:
+            q.join()
 
     def shutdown(self, abandon: bool = False) -> None:
-        """Stop the digest worker. ``abandon=True`` models node death:
+        """Stop the digest workers. ``abandon=True`` models node death:
         queued jobs are skipped instead of run (a dead node must not
         keep digesting), and the join is best-effort."""
         self._abandon = abandon
-        t = self._digest_thread
-        if t is not None and t.is_alive() \
-                and t is not threading.current_thread():
-            # the current-thread guard matters for injected crashes: a
-            # crash point firing ON the digest worker (kill_node ->
-            # shutdown) must not try to join itself
-            self._digest_q.put(None)
-            # abandon: best-effort join — a job wedged on dead-node IO
-            # must not stall the failure path; it skips on wake anyway
-            t.join(timeout=None if not abandon else 0.25)
-        self._digest_thread = None
+        me = threading.current_thread()
+        for i, t in enumerate(self._digest_threads):
+            if t is not None and t.is_alive() and t is not me:
+                # the current-thread guard matters for injected crashes:
+                # a crash point firing ON a digest worker (kill_node ->
+                # shutdown) must not try to join itself
+                self._digest_qs[i].put(None)
+                # abandon: best-effort join — a job wedged on dead-node
+                # IO must not stall the failure path; it skips on wake
+                t.join(timeout=None if not abandon else 0.25)
+            self._digest_threads[i] = None
+        if self.group_commit is not None:
+            self.group_commit.close()
+        for sink in self._group_sinks.values():
+            sink.close()
+        self._group_sinks.clear()
+
+    # -- digest shard / per-proc lock helpers ---------------------------------
+    def _shard_of(self, path: str) -> int:
+        return subtree_shard(path, self._digest_shards)
+
+    def _slot_digest_lock(self, proc_id: str) -> threading.RLock:
+        with self._locks_guard:
+            lk = self._slot_digest_locks.get(proc_id)
+            if lk is None:
+                lk = self._slot_digest_locks[proc_id] = threading.RLock()
+            return lk
 
     # -- replica slots (chain replication target) ----------------------------
     def slot_for(self, proc_id: str) -> ReplicaSlot:
@@ -191,19 +248,85 @@ class SharedFS:
                                       tail)
         return slot.acked_seqno
 
+    # -- group commit (cross-process batch replication) ------------------------
+    def ensure_group_sink(self, writer_node: str) -> None:
+        """RPC: register the ``gslot/<writer-node>`` region that group-
+        committed batches from that node land in (idempotent)."""
+        if writer_node not in self._group_sinks:
+            sink = GroupSlotSink(self, writer_node)
+            self._group_sinks[writer_node] = sink
+            self.transport.register_region(self.node_id,
+                                           f"gslot/{writer_node}", sink)
+
+    def group_continue(self, writer_node: str, items: List[Tuple],
+                       rest: List[str]) -> List[int]:
+        """RPC: ack a group-committed batch; the payload arrived via the
+        one-sided ``gslot`` write (the sink already routed each member's
+        slice into its ReplicaSlot and journaled the batch) — this RPC
+        carries only (proc_id, since, last) descriptors, never data.
+        Forwarding down the chain re-frames each member's slice out of
+        the local slots (``suffix_bytes``), so a hop ships each entry's
+        bytes exactly once too. Returns per-member acked seqnos in
+        ``items`` order."""
+        if rest:
+            head, tail = rest[0], rest[1:]
+            self.transport.crashpoint("chain.fwd", self.node_id)
+            framed = frame_batch(
+                [(pid, self.slot_for(pid).suffix_bytes(since))
+                 for pid, since, _last in items])
+            self.transport.one_sided_write(head, f"gslot/{writer_node}",
+                                           framed)
+            self.transport.rpc(head, "group_continue", writer_node, items,
+                               tail)
+        return [self.slot_for(pid).acked_seqno for pid, _s, _l in items]
+
     # -- digest / eviction (paper §A.1) ----------------------------------------
+    def _apply_batch(self, entries: List[L.Entry]) -> None:
+        """Apply one digest batch under the shard locks. With a single
+        shard this is exactly the old per-node digest lock. With
+        several, the batch is grouped by subtree shard and each group
+        applies under its own lock — two workers digesting different
+        subtrees never contend. A rename across shards (rare: it
+        crosses a lease boundary) falls back to holding every shard
+        lock in order so its delete+put pair is atomic batch-wide."""
+        if self._digest_shards == 1:
+            with self._shard_locks[0]:
+                for e in entries:
+                    self._apply_entry(e)
+            return
+        cross = any(
+            e.op == L.OP_RENAME
+            and self._shard_of(e.path) != self._shard_of(e.data.decode())
+            for e in entries)
+        if cross:
+            for lk in self._shard_locks:
+                lk.acquire()
+            try:
+                for e in entries:
+                    self._apply_entry(e)
+            finally:
+                for lk in reversed(self._shard_locks):
+                    lk.release()
+            return
+        groups: Dict[int, List[L.Entry]] = {}
+        for e in entries:
+            groups.setdefault(self._shard_of(e.path), []).append(e)
+        for i in sorted(groups):
+            with self._shard_locks[i]:
+                for e in groups[i]:
+                    self._apply_entry(e)
+
     def digest_slot(self, proc_id: str, through_seqno: int) -> int:
-        """Apply a process's replicated log prefix into the hot area."""
-        with self._digest_lock:
+        """Apply a process's replicated log prefix into the hot area.
+        Serialized per process (apply/truncate must see a consistent
+        slot cut) but concurrent across processes."""
+        with self._slot_digest_lock(proc_id):
             slot = self.slot_for(proc_id)
-            applied = 0
-            for e in slot.entries:
-                if e.seqno > through_seqno:
-                    break
-                self._apply_entry(e)
-                applied += 1
-            self._evict_if_needed()
-            self._commit_areas()
+            batch = [e for e in slot.entries if e.seqno <= through_seqno]
+            self._apply_batch(batch)
+            with self._commit_lock:
+                self._evict_if_needed()
+                self._commit_areas()
             # dying here (applied, not yet truncated) is safe exactly
             # because re-digesting the same slot prefix is idempotent
             self.transport.crashpoint("digest.mid", self.node_id)
@@ -211,7 +334,7 @@ class SharedFS:
             # areas — a crash in between must never lose the digested range
             slot.truncate_through(through_seqno)
             self.stats["digests"] += 1
-            return applied
+            return len(batch)
 
     def digest_slot_chain(self, proc_id: str, through_seqno: int,
                           rest: List[str]) -> int:
@@ -225,9 +348,8 @@ class SharedFS:
         return applied
 
     def digest_entries(self, entries: List[L.Entry]) -> int:
-        with self._digest_lock:
-            for e in entries:
-                self._apply_entry(e)
+        self._apply_batch(entries)
+        with self._commit_lock:
             # node dies mid-digest, before the area commit: the applied
             # batch is buffered, not durable — recovery replays it from
             # the replicated log (slots), never from the torn area
@@ -235,7 +357,7 @@ class SharedFS:
             self.stats["digests"] += 1
             self._evict_if_needed()
             self._commit_areas()
-            return len(entries)
+        return len(entries)
 
     def _commit_areas(self) -> None:
         """One flush per digest batch (vs the seed's per-op flush)."""
@@ -451,7 +573,12 @@ class SharedFS:
                 ln = (n - lo) if length is None else min(length, n - lo)
                 return ("val", slot.region_id, boff + lo, ln, n, rkey)
             return self._inline_desc(v, offset, length)
-        for area, rid in ((self.hot, "area/hot"), (self.cold, "area/cold")):
+        if self._digest_shards > 1:
+            i = self.hot.shard_index(path)
+            hot_pair = (self.hot.shards[i], f"area/hot/{i}")
+        else:
+            hot_pair = (self.hot, "area/hot")
+        for area, rid in (hot_pair, (self.cold, "area/cold")):
             d = area.locate(path, offset, length)
             if d is None:
                 continue
@@ -500,19 +627,21 @@ class SharedFS:
         mgr_node = self.cluster.manager_for(subtree, self.node_id)
         now = self.cluster.clock()
         if mgr_node == self.node_id:
-            lease = self.lease_mgr.acquire(holder, path, mode, now)
+            lease = self.lease_mgr.acquire(holder, path, mode, now,
+                                           subtree=subtree)
             return (lease.path, lease.mode, lease.expires_at)
         # idempotent at the manager (a re-acquire refreshes the grant),
         # so a dropped grant RPC is safely retried
         return with_retries(
             lambda: self.transport.rpc(mgr_node, "lease_acquire_local",
-                                       holder, path, mode),
+                                       holder, path, mode, subtree),
             stats=self.transport.stats)
 
-    def lease_acquire_local(self, holder: str, path: str,
-                            mode: str) -> Tuple[str, str, float]:
+    def lease_acquire_local(self, holder: str, path: str, mode: str,
+                            subtree: str = "/") -> Tuple[str, str, float]:
         lease = self.lease_mgr.acquire(holder, path, mode,
-                                       self.cluster.clock())
+                                       self.cluster.clock(),
+                                       subtree=subtree)
         return (lease.path, lease.mode, lease.expires_at)
 
     def _revoke_holder(self, holder: str, path: str) -> None:
@@ -611,7 +740,10 @@ class SharedFS:
                     except Exception:
                         pass  # dead peer: chain repair handles it
 
-            self.submit_digest(_replay)
+            # keyed by proc: FIFO with any digest the successor seals
+            # for the same process afterwards (the ordering the fast-
+            # promotion read path depends on)
+            self.submit_digest(_replay, key=proc_id)
         self.stats["promotions"] += 1
         return acked
 

@@ -166,14 +166,36 @@ class DramCache:
 
 
 class _DigestJob:
-    """One sealed region in flight on the SharedFS digest worker."""
+    """One sealed region in flight on the SharedFS digest worker.
 
-    __slots__ = ("region", "done", "error")
+    Completion is a condition variable, not a polled flag: a writer
+    blocked on backpressure (hard-full log waiting out the previous
+    digest) sleeps on ``cv`` and is woken by ``finish`` from the digest
+    worker — no sleep/poll loop anywhere on the wait path."""
+
+    __slots__ = ("region", "cv", "done", "error")
 
     def __init__(self, region: SealedRegion):
         self.region = region
-        self.done = threading.Event()
+        self.cv = threading.Condition()
+        self.done = False
         self.error: Optional[BaseException] = None
+
+    def finish(self, error: Optional[BaseException] = None) -> None:
+        with self.cv:
+            if error is not None and self.error is None:
+                self.error = error
+            self.done = True
+            self.cv.notify_all()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        with self.cv:
+            if timeout is None:
+                while not self.done:
+                    self.cv.wait()
+            elif not self.done:
+                self.cv.wait(timeout)
+            return self.done
 
 
 class LibState:
@@ -183,7 +205,8 @@ class LibState:
                  dram_capacity: int = 2 << 30, subtree: str = "/",
                  fsync_data: bool = False, pipeline_digests: bool = True,
                  one_sided_reads: bool = True, remote_batch: int = 32,
-                 start_seqno: int = 0, settle_before_digest: bool = False):
+                 start_seqno: int = 0, settle_before_digest: bool = False,
+                 group_commit: bool = True):
         assert mode in ("pessimistic", "optimistic")
         self.proc_id = proc_id
         self.sfs = sharedfs
@@ -239,6 +262,10 @@ class LibState:
         # (pipeline_digests=False restores the old inline behavior —
         # the fig13 same-run comparison toggle)
         self.pipeline_digests = pipeline_digests
+        # group commit: route fsync/dsync through the node coordinator
+        # when the SharedFS runs one (opt-in at cluster construction);
+        # per-process opt-out keeps the legacy path for comparisons
+        self._group_commit = group_commit
         self._inflight: Optional[_DigestJob] = None
         # serializes chain replication (writer fsync/dsync vs the digest
         # worker) so the replicated stream stays a seqno-ordered prefix
@@ -282,6 +309,9 @@ class LibState:
         seen = set()
         self.chain.chain = [n for n in list(chain) + list(reserves)
                             if n != me and not (n in seen or seen.add(n))]
+        # drop any parked sender error and rewind the submitted
+        # watermark: the unacked range re-ships to the repaired chain
+        self.chain.reset()
         self.reserves = [n for n in reserves if n != me]
         seen = set()
         self.read_peers = [n for n in self.reserves + self.chain.chain
@@ -359,7 +389,7 @@ class LibState:
             self.digest()  # pre-pipeline behavior: digest inline
             return
         job = self._inflight
-        if job is not None and not job.done.is_set() \
+        if job is not None and not job.done \
                 and self.log.bytes < self.log.capacity:
             # a digest is still in flight and the active region has
             # headroom: defer the seal instead of blocking — a slow
@@ -401,21 +431,38 @@ class LibState:
 
     def fsync(self) -> None:
         self._check_epoch()
-        self.log.persist()
         if self.mode == "pessimistic":
+            gc = getattr(self.sfs, "group_commit", None)
+            if gc is not None and self._group_commit:
+                # group path: the coordinator flushes the log to the OS,
+                # makes the batch durable with ONE journal fsync, and
+                # ships one framed chain slice for every co-committing
+                # process — this writer's per-op fsync is amortized away
+                gc.commit(self, coalesce=False)
+                return
+            self.log.persist()
             with self._repl_lock:
                 self._replicate(coalesce=False)
+            return
+        self.log.persist()
 
     def dsync(self) -> None:
         self._check_epoch()
+        gc = getattr(self.sfs, "group_commit", None)
+        if gc is not None and self._group_commit:
+            gc.commit(self, coalesce=(self.mode == "optimistic"))
+            return
         self.log.persist()
         with self._repl_lock:
             self._replicate(coalesce=(self.mode == "optimistic"))
 
     def _replicate(self, coalesce: bool) -> None:
         """Replicate everything past the chain's watermark — spanning a
-        seal boundary if one is pending. Caller holds ``_repl_lock``."""
-        since = self.chain.replicated_seqno
+        seal boundary if one is pending. Caller holds ``_repl_lock``.
+        Any pipelined sealed-region ship is settled first so the slice
+        computed here starts exactly where the wire stream left off."""
+        self.chain.wait_acked(self.chain.submitted_seqno)
+        since = self.chain.submitted_seqno
         pending = self.log.entries_since(since)
         if not pending:
             return
@@ -423,7 +470,7 @@ class LibState:
             reduced = UpdateLog.coalesce(pending)
             self.stats["coalesced_out"] += len(pending) - len(reduced)
             self.chain.replicate(reduced)
-            self.chain.replicated_seqno = pending[-1].seqno
+            self.chain.mark_acked(pending[-1].seqno)
         else:
             # zero-copy: ship the log's pre-encoded byte range as-is
             self.chain.replicate(pending, self.log.encoded_since(since))
@@ -721,24 +768,33 @@ class LibState:
         self.stats["seals"] += 1
         self.stats["digests"] += 1
         self.sfs.submit_digest(lambda: self._digest_region(job),
-                               abort=lambda: self._abort_job(job))
+                               abort=lambda: self._abort_job(job),
+                               key=self.proc_id)
 
     @staticmethod
     def _abort_job(job: _DigestJob) -> None:
         """Node died with the seal still queued: fail the job (the
         sealed region stays in the log for recovery) and release any
         waiter — crash()/drain() must not hang on a dead worker."""
-        job.error = RuntimeError("background digest abandoned: node down")
-        job.done.set()
+        job.finish(RuntimeError("background digest abandoned: node down"))
 
     def _digest_region(self, job: _DigestJob) -> None:
-        """Worker-side digest of one sealed region: replicate the not-
-        yet-replicated suffix, apply locally, fan the digest down the
-        chain. Log truncation (the reap) stays writer-side."""
+        """Worker-side digest of one sealed region: ship the not-yet-
+        replicated suffix, apply locally, fan the digest down the chain.
+        Log truncation (the reap) stays writer-side.
+
+        Pessimistic mode ships *pipelined*: the pre-encoded slice is
+        handed to the chain sender (bounded in-flight window) and the
+        local area apply overlaps the wire time; the fan-out below waits
+        only on this region's own ack watermark. Optimistic mode keeps
+        the synchronous replicate (the coalesced batch has no contiguous
+        file range and must land atomically under its TXN barrier)."""
         region = job.region
         try:
+            shipped = 0
             with self._repl_lock:
-                since = self.chain.replicated_seqno
+                self.chain.wait_acked(self.chain.submitted_seqno)
+                since = self.chain.submitted_seqno
                 pending = region.entries_since(since)
                 if pending:
                     if self.mode == "optimistic":
@@ -746,11 +802,15 @@ class LibState:
                         self.stats["coalesced_out"] += \
                             len(pending) - len(reduced)
                         self.chain.replicate(reduced)
-                        self.chain.replicated_seqno = pending[-1].seqno
+                        self.chain.mark_acked(pending[-1].seqno)
                     else:
-                        self.chain.replicate(
-                            pending, region.encoded_since(since))
+                        shipped = pending[-1].seqno
+                        self.chain.submit(shipped,
+                                          region.encoded_since(since))
+            # the apply overlaps the in-flight chain ship (pipelining)
             self.sfs.digest_entries(region.entries)
+            if shipped:
+                self.chain.wait_acked(shipped)
             # no repl lock here: fan-out truncation and concurrent fsync
             # appends serialize per slot (disjoint seqno ranges), and
             # holding the lock across the chain RPC would stall the
@@ -758,9 +818,9 @@ class LibState:
             self.chain.digest_fanout(region.last_seqno)
             self.log.reap_files(region.last_seqno)  # file IO off-path
         except BaseException as e:  # surfaced at the next drain point
-            job.error = e
+            job.finish(e)
         finally:
-            job.done.set()
+            job.finish()
 
     def _reap(self, wait: bool) -> None:
         """Writer-side completion of a background digest: drop the
@@ -770,11 +830,11 @@ class LibState:
         job = self._inflight
         if job is None:
             return
-        if not job.done.is_set():
+        if not job.done:
             if not wait:
                 return
             self.stats["backpressure_waits"] += 1
-            job.done.wait()
+            job.wait()
         self._inflight = None
         if job.error is None:
             self.log.drop_sealed()
@@ -828,13 +888,15 @@ class LibState:
         watermark)."""
         job = self._inflight
         if job is not None:
-            job.done.wait()
+            job.wait()
             self._inflight = None
+        self.chain.stop()
         self.dram.clear()
         self.log.close()
 
     def close(self) -> None:
         self.digest()
+        self.chain.stop()
         self.sfs.lease_mgr.release_all(self.proc_id)
         self.sfs.local_procs.pop(self.proc_id, None)
         self._lease_cache.clear()

@@ -213,7 +213,7 @@ def test_abandoned_seal_job_releases_waiters(tmp_cluster):
     ls.seal_and_digest()               # queued behind the gate
     tmp_cluster.kill_node("node0")     # abandon: queued job is skipped
     gate.set()                         # wedged worker wakes, aborts job
-    assert ls._inflight.done.wait(timeout=5)
+    assert ls._inflight.wait(timeout=5)
     assert ls._inflight.error is not None
     ls.crash()                         # must not hang
     assert ls._inflight is None
