@@ -17,7 +17,8 @@ ROWS = []
 
 def row(name: str, us_per_call: float, derived: str = "", *,
         p50: float = None, p99: float = None, p999: float = None,
-        wire_bytes: float = None, ops_per_s: float = None):
+        wire_bytes: float = None, ops_per_s: float = None,
+        corruptions_detected: int = None, repairs: int = None):
     """Record one benchmark row. Percentile columns are optional: tail-
     latency rows (fig13.*) carry p50/p99/p999 alongside the mean so the
     perf-trajectory guard (benchmarks/compare.py) can diff tails too.
@@ -26,7 +27,11 @@ def row(name: str, us_per_call: float, derived: str = "", *,
     whole-blob remote reads independent of machine speed. ``ops_per_s``
     is AGGREGATE throughput for multi-writer rows (fig17.*): under
     concurrency it is not 1e6/us_per_call, so the scaling guard
-    (``--writer-scaling-min``) reads this column, not the mean."""
+    (``--writer-scaling-min``) reads this column, not the mean.
+    ``corruptions_detected``/``repairs`` (fig18.*) record how many
+    injected corruptions the run caught and healed — detection
+    completeness is asserted in-bench; the columns keep the counts in
+    the BENCH_*.json trajectory."""
     r = {"name": name, "us_per_call": us_per_call, "derived": derived}
     tail = ""
     if p50 is not None:
@@ -38,6 +43,12 @@ def row(name: str, us_per_call: float, derived: str = "", *,
     if ops_per_s is not None:
         r["ops_per_s"] = ops_per_s
         tail += f",ops/s={ops_per_s:.0f}"
+    if corruptions_detected is not None:
+        r["corruptions_detected"] = corruptions_detected
+        tail += f",detected={corruptions_detected}"
+    if repairs is not None:
+        r["repairs"] = repairs
+        tail += f",repairs={repairs}"
     ROWS.append(r)
     print(f"{name},{us_per_call:.2f},{derived}{tail}", flush=True)
 

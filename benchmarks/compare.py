@@ -45,7 +45,7 @@ def main() -> int:
                          "in the repo root")
     ap.add_argument("--prefixes",
                     default="fig10.,table1.,fig12.,fig13.,fig14.,fig15.,"
-                            "fig17.",
+                            "fig17.,fig18.",
                     help="comma-separated row-name prefixes to guard")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/old us_per_call exceeds this")
@@ -68,6 +68,13 @@ def main() -> int:
                          "1.2x the pre-group (group_commit=False) p50. "
                          "Pass 0 to disable. Skipped when the NEW dump "
                          "has no fig17 rows.")
+    ap.add_argument("--verify-overhead-max-ratio", type=float, default=1.1,
+                    help="integrity gate (fig18, within-file): fail "
+                         "when the NEW dump's verified one-sided read "
+                         "p99 exceeds this multiple of the unverified "
+                         "p99 — the checksum check must stay off the "
+                         "critical path's tail. Pass 0 to disable. "
+                         "Skipped when the NEW dump has no fig18 rows.")
     ap.add_argument("--wire-bytes-max-ratio", type=float, default=1.5,
                     help="fail when new/old wire_bytes exceeds this — "
                          "wire bytes are deterministic transport "
@@ -156,6 +163,19 @@ def main() -> int:
                   f"ops/s (min half of previous){flag}")
             if flag:
                 regressed.append("fig17.w8_trajectory")
+
+    # -- fig18 verified-read overhead gate (within-file) -------------------
+    VER, UNV = "fig18.read4k_verified", "fig18.read4k_unverified"
+    if args.verify_overhead_max_ratio > 0 and VER in new and UNV in new:
+        v99, u99 = float(new[VER]["p99"]), float(new[UNV]["p99"])
+        ratio = v99 / u99
+        flag = (" REGRESSION"
+                if ratio > args.verify_overhead_max_ratio else "")
+        print(f"  fig18 verify overhead: p99 {v99:.2f}us verified vs "
+              f"{u99:.2f}us unverified = {ratio:.3f}x (max "
+              f"{args.verify_overhead_max_ratio}x){flag}")
+        if flag:
+            regressed.append("fig18.verify_overhead")
 
     print(f"compare: {compared} rows compared, {missing} missing, "
           f"{len(regressed)} regressed")

@@ -9,8 +9,10 @@ Public surface:
 """
 from repro.core.cluster import ClusterManager
 from repro.core.extents import ExtentOverlay, splice
-from repro.core.faults import Fault, FaultInjector
+from repro.core.faults import BitRot, Fault, FaultInjector
+from repro.core.groupcommit import JournalCorruption
 from repro.core.harness import AssiseCluster
+from repro.core.integrity import CorruptExtent
 from repro.core.log import (Entry, UpdateLog, OP_DELETE, OP_PUT, OP_RENAME,
                             OP_WRITE, decode_stream)
 from repro.core.segstore import FileArea, SegmentStore
@@ -19,8 +21,10 @@ from repro.core.store import LibState, recover_process
 from repro.core.transport import (Transport, NodeDown, RpcTimeout,
                                   StaleHandle, with_retries)
 
-__all__ = ["AssiseCluster", "ClusterManager", "Entry", "ExtentOverlay",
-           "Fault", "FaultInjector", "FileArea", "LibState", "NodeDown",
+__all__ = ["AssiseCluster", "BitRot", "ClusterManager", "CorruptExtent",
+           "Entry", "ExtentOverlay",
+           "Fault", "FaultInjector", "FileArea", "JournalCorruption",
+           "LibState", "NodeDown",
            "RpcTimeout", "SegmentStore", "SharedFS", "StaleHandle",
            "Transport", "UpdateLog", "OP_PUT", "OP_DELETE", "OP_RENAME",
            "OP_WRITE", "decode_stream", "recover_process", "splice",

@@ -19,6 +19,11 @@ Fault kinds:
 - ``delay`` — slow link: accounted (``injected['delay']``), not slept;
 - ``stale`` — a one-sided read's handle is invalidated mid-flight
   (``StaleHandle``), forcing the ranged-RPC fallback path;
+- ``corrupt`` — a one-sided read payload arrives with a flipped bit:
+  no exception is raised; detection is entirely the reader's job
+  (chunk-CRC verification, DESIGN.md §5.3);
+- ``torn`` — a one-sided read payload arrives truncated (partial
+  completion), again silently;
 - ``crash`` — kill a node at a **named crash point** mid-protocol
   (``op`` holds the point name, e.g. ``chain.mid``); the transport
   invokes its ``on_crash`` callback (wired to ``kill_node`` by the
@@ -45,6 +50,7 @@ unfair adversary; persistent failures are modeled by ``set_down`` /
 """
 from __future__ import annotations
 
+import os
 import random
 from collections import Counter
 from dataclasses import dataclass, field
@@ -59,7 +65,7 @@ class Fault:
     anything. The fault fires on matching calls after skipping the
     first ``after`` of them, at most ``count`` times (-1 = always)."""
 
-    kind: str                 # drop | dup | delay | stale | crash
+    kind: str   # drop | dup | delay | stale | corrupt | torn | crash
     op: str = "rpc"           # rpc | read | write | <crash-point name>
     dst: str = "*"
     method: str = "*"
@@ -90,13 +96,16 @@ class FaultInjector:
     def __init__(self, faults: Tuple[Fault, ...] = (), *,
                  seed: Optional[int] = None, p_drop: float = 0.0,
                  p_dup: float = 0.0, p_delay: float = 0.0,
-                 p_stale: float = 0.0, max_random: Optional[int] = None):
+                 p_stale: float = 0.0, p_corrupt: float = 0.0,
+                 p_torn: float = 0.0, max_random: Optional[int] = None):
         self.faults: List[Fault] = list(faults)
         self.rng = random.Random(seed)
         self.p_drop = p_drop
         self.p_dup = p_dup
         self.p_delay = p_delay
         self.p_stale = p_stale
+        self.p_corrupt = p_corrupt
+        self.p_torn = p_torn
         self.max_random = max_random
         self._n_random = 0
         self._no_drop = set()  # sites owed a fair retry (see module doc)
@@ -133,11 +142,15 @@ class FaultInjector:
         r = self.rng.random()
         lo = 0.0
         for kind, p in (("drop", self.p_drop), ("dup", self.p_dup),
-                        ("stale", self.p_stale), ("delay", self.p_delay)):
+                        ("stale", self.p_stale), ("delay", self.p_delay),
+                        ("corrupt", self.p_corrupt),
+                        ("torn", self.p_torn)):
             if p <= 0.0:
                 continue
             if kind == "stale" and op != "read":
                 continue  # only one-sided reads carry an rkey
+            if kind in ("corrupt", "torn") and op != "read":
+                continue  # payload faults model one-sided read pulls
             if kind == "dup" and op == "read":
                 continue  # duplicate read delivery is invisible
             if lo <= r < lo + p:
@@ -171,3 +184,96 @@ class FaultInjector:
                 self._record("crash", point, node_id, "*")
                 return True
         return False
+
+
+class BitRot:
+    """Seeded **at-rest** corruptor: flips one bit in data that is
+    already persisted — segment files, replica-slot region buffers, or
+    group-commit journal frames — *behind the back* of the in-memory
+    index and chunk-CRC tables, which keep describing the original
+    bytes. That is exactly the media-corruption model: the metadata is
+    the truth, the bytes rotted underneath it.
+
+    Every flip is recorded in ``flips`` as ``(surface, detail)`` so
+    tests and benches can assert that each injected corruption was
+    later detected/repaired."""
+
+    def __init__(self, seed: Optional[int] = None):
+        self.rng = random.Random(seed)
+        self.flips: List[tuple] = []
+
+    def _flip_bit(self, b: int) -> int:
+        return b ^ (1 << self.rng.randrange(8))
+
+    def flip_in_store(self, store, path: str) -> bool:
+        """Flip one bit inside a random needle referenced by ``path``'s
+        index entry in a ``SegmentStore`` (or a shard of a
+        ``ShardedSegmentStore``). Returns False when the path is absent.
+        The store's in-memory index and CRCs are left untouched."""
+        sh = store.shard_for(path) if hasattr(store, "shard_for") \
+            else store
+        with sh._lock:
+            loc = sh.index.get(path)
+            if loc is None:
+                return False
+            units = [u for u in sh._loc_units(loc) if u[2] > 0]
+            if not units:
+                return False
+            seg_id, voff, vlen = self.rng.choice(units)
+            sh.commit()  # the needle must be on disk before we rot it
+            i = self.rng.randrange(vlen)
+            fd = os.open(sh._seg_path(seg_id), os.O_RDWR)
+            try:
+                b = os.pread(fd, 1, voff + i)
+                os.pwrite(fd, bytes([self._flip_bit(b[0])]), voff + i)
+            finally:
+                os.close(fd)
+        self.flips.append(("segment", (sh.root, seg_id, path, i)))
+        return True
+
+    def flip_in_slot(self, slot, path: str) -> bool:
+        """Flip one bit of ``path``'s needle inside a ``ReplicaSlot``'s
+        region buffer (the memory one-sided reads are served from). The
+        slot's entry mirror holds separate bytes and stays clean — the
+        defined corruption surface is the region, and repair re-encodes
+        the region from the mirror."""
+        with slot._lock:
+            loc = slot._locs.get(path)
+            if loc is None or loc[1] == 0:
+                return False
+            boff, n = loc[0], loc[1]
+            i = self.rng.randrange(n)
+            slot._buf[boff + i] = self._flip_bit(slot._buf[boff + i])
+        self.flips.append(("slot", (slot.path, path, i)))
+        return True
+
+    def flip_in_journal(self, journal, frame: Optional[int] = None) -> \
+            Optional[int]:
+        """Flip one bit inside the payload of a framed batch in a
+        ``CommitJournal`` ring (frame header left intact, so the frame
+        still parses but its CRC no longer matches). ``frame`` picks a
+        specific frame index; None picks one at random. Returns the
+        corrupted frame's index, or None when the ring holds no
+        complete frames."""
+        from repro.core.groupcommit import _FRAME
+        frames = []  # (payload_off, payload_len)
+        buf = os.pread(journal._fd, journal.capacity, 0)
+        off, n = 0, len(buf)
+        while off + _FRAME.size <= n:
+            plen, dlen, _crc = _FRAME.unpack_from(buf, off)
+            if plen == 0:
+                break
+            end = off + _FRAME.size + plen + dlen
+            if end > n:
+                break
+            frames.append((off + _FRAME.size, plen + dlen))
+            off = end
+        if not frames:
+            return None
+        idx = self.rng.randrange(len(frames)) if frame is None else frame
+        foff, flen = frames[idx]
+        i = foff + self.rng.randrange(flen)
+        b = os.pread(journal._fd, 1, i)
+        os.pwrite(journal._fd, bytes([self._flip_bit(b[0])]), i)
+        self.flips.append(("journal", (journal.path, idx, i)))
+        return idx

@@ -32,40 +32,72 @@ import queue
 import struct
 import threading
 import time
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.log import UpdateLog, decode_stream
 from repro.core.transport import with_retries
 
-# frame header: proc-id length, payload length
-_FRAME = struct.Struct("<HI")
+# frame header: proc-id length, payload length, CRC32 of pid+payload.
+# The CRC is what lets journal replay tell a torn tail (the crash cut
+# the last frame short: expected, prefix semantics) from a corrupted
+# middle frame (acknowledged batches would be silently lost: raise).
+_FRAME = struct.Struct("<HII")
+
+
+class JournalCorruption(RuntimeError):
+    """A CRC-bad frame was found *before* later, valid frames in a
+    commit journal: mid-journal corruption, not a torn tail. Replaying
+    past it would silently drop an acknowledged batch while keeping
+    newer ones — recovery must fail loudly and repair from replicas."""
 
 
 def frame_batch(items: List[Tuple[str, bytes]]) -> bytes:
     """One wire buffer holding each member's pre-encoded log slice,
-    tagged with its proc id (entries alone don't carry one)."""
+    tagged with its proc id (entries alone don't carry one) and
+    covered by a frame CRC."""
     parts = []
     for pid, data in items:
         p = pid.encode()
-        parts.append(_FRAME.pack(len(p), len(data)))
+        parts.append(_FRAME.pack(len(p), len(data),
+                                 zlib.crc32(data, zlib.crc32(p))))
         parts.append(p)
         parts.append(data)
     return b"".join(parts)
 
 
-def unframe_batch(buf: bytes) -> List[Tuple[str, bytes]]:
+def scan_frames(buf: bytes) -> List[Tuple[str, bytes, bool]]:
+    """Structural frame scan: ``(pid, payload, crc_ok)`` per complete
+    frame, stopping at a zeroed header (preallocated-journal end
+    marker) or a frame cut short by the buffer end (torn tail)."""
     out, off, n = [], 0, len(buf)
     while off + _FRAME.size <= n:
-        plen, dlen = _FRAME.unpack_from(buf, off)
+        plen, dlen, crc = _FRAME.unpack_from(buf, off)
         if plen == 0:
             break  # zeroed header: preallocated-journal end marker
         off += _FRAME.size
         end = off + plen + dlen
         if end > n:
             break  # torn frame: prefix semantics, same as the log
-        pid = buf[off:off + plen].decode()
-        out.append((pid, bytes(buf[off + plen:end])))
+        blob = bytes(buf[off:end])
+        ok = zlib.crc32(blob) == crc
+        try:
+            pid = blob[:plen].decode()
+        except UnicodeDecodeError:
+            pid, ok = "", False  # header survived, pid bytes rotted
+        out.append((pid, blob[plen:], ok))
         off = end
+    return out
+
+
+def unframe_batch(buf: bytes) -> List[Tuple[str, bytes]]:
+    """Lenient unframing for in-flight buffers: the valid prefix, cut
+    at the first CRC-bad frame (a torn one-sided delivery)."""
+    out = []
+    for pid, data, ok in scan_frames(buf):
+        if not ok:
+            break
+        out.append((pid, data))
     return out
 
 
@@ -134,10 +166,25 @@ class CommitJournal:
         """Decode the journal's surviving frames: proc id -> entries.
         Recovery uses this to re-ship a log tail that was flushed to the
         journal but lost from a member log file (the log skipped its own
-        fsync on the group path)."""
+        fsync on the group path).
+
+        A CRC-bad frame at the decodable end is a torn tail (the crash
+        interrupted the last batch's pwrite): prefix semantics, drop it.
+        A CRC-bad frame with *valid frames after it* is at-rest
+        corruption of an acknowledged batch — truncating there would
+        silently lose it while replaying newer ones, so this raises
+        ``JournalCorruption`` instead (the caller repairs from
+        replicas)."""
         buf = os.pread(self._fd, self.capacity, 0)
+        frames = scan_frames(buf)
+        bad = next((i for i, f in enumerate(frames) if not f[2]), None)
+        if bad is not None and any(f[2] for f in frames[bad + 1:]):
+            raise JournalCorruption(
+                f"{self.path}: frame {bad} corrupt before valid frames")
         out: Dict[str, list] = {}
-        for pid, data in unframe_batch(buf):
+        for pid, data, ok in frames:
+            if not ok:
+                break
             out.setdefault(pid, []).extend(decode_stream(data))
         return out
 

@@ -20,7 +20,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core.cluster import ClusterManager
-from repro.core.faults import FaultInjector
+from repro.core.faults import BitRot, FaultInjector
 from repro.core.sharedfs import SharedFS
 from repro.core.store import LibState, recover_process
 from repro.core.transport import Transport, with_retries
@@ -81,6 +81,60 @@ class AssiseCluster:
 
     def clear_faults(self) -> None:
         self.transport.install_faults(None)
+
+    # -- integrity: at-rest corruption, scrub, counters ------------------------
+    def corrupt_at_rest(self, node_id: str, path: str, *,
+                        tier: str = "hot", rot: Optional[BitRot] = None,
+                        seed: Optional[int] = None) -> bool:
+        """Flip one bit of ``path``'s persisted needle in ``node_id``'s
+        hot or cold area (seeded; see faults.BitRot). Returns False if
+        the path has no needle there."""
+        rot = rot or BitRot(seed)
+        sfs = self.sharedfs[node_id]
+        store = sfs.hot if tier == "hot" else sfs.cold
+        return rot.flip_in_store(store, path)
+
+    def corrupt_slot(self, node_id: str, proc_id: str, path: str, *,
+                     rot: Optional[BitRot] = None,
+                     seed: Optional[int] = None) -> bool:
+        """Flip one bit of ``path``'s needle in the replica-slot region
+        that ``node_id`` mirrors for ``proc_id``."""
+        rot = rot or BitRot(seed)
+        slot = self.sharedfs[node_id].slot_for(proc_id)
+        return rot.flip_in_slot(slot, path)
+
+    def scrub_all(self, **kw) -> Dict[str, int]:
+        """Run one synchronous scrub pass on every alive node; returns
+        summed counters (scanned/errors/repaired/disagreements)."""
+        total: Dict[str, int] = {}
+        for nid in self.node_ids:
+            if nid in self.dead_nodes:
+                continue
+            for k, v in self.sharedfs[nid].scrub_now(**kw).items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+    def integrity_stats(self) -> Dict[str, int]:
+        """Cluster-wide integrity counters: client-side detections and
+        verified reads, server-side repairs/scrub results, quarantines."""
+        out = {"verified_reads": 0, "corrupt_extents": 0, "repairs": 0,
+               "repair_failures": 0, "scrub_repairs": 0, "scrub_errors": 0,
+               "scrub_disagreements": 0, "checksum_exchanges": 0,
+               "quarantined_segments": 0, "store_repairs": 0}
+        for ls in self.procs.values():
+            out["verified_reads"] += ls.stats.get("verified_reads", 0)
+            out["corrupt_extents"] += ls.stats.get("corrupt_extents", 0)
+        for nid, sfs in self.sharedfs.items():
+            if nid in self.dead_nodes:
+                continue
+            for k in ("repairs", "repair_failures", "scrub_repairs",
+                      "scrub_errors", "scrub_disagreements",
+                      "checksum_exchanges"):
+                out[k] += sfs.stats.get(k, 0)
+            for area in (sfs.hot, sfs.cold):
+                out["quarantined_segments"] += area.quarantined_segments
+                out["store_repairs"] += area.repairs
+        return out
 
     # -- processes -------------------------------------------------------------
     def open_process(self, proc_id: str, node_id: Optional[str] = None,

@@ -29,6 +29,7 @@ from typing import List, Optional
 
 from repro.core.log import _HDR, _WRITE_BUF  # wire header / buffer size
 from repro.core.extents import apply_range_write
+from repro.core.integrity import full_sum, prefix_sums
 from repro.core.log import (Entry, affected_paths, decode_stream,
                             renames_touch)
 from repro.core.transport import next_rkey, with_retries
@@ -73,11 +74,17 @@ class ReplicaSlot:
         self._seqnos: List[int] = []   # entry i -> seqno (bisect key)
         self.mirror = {}  # path -> bytes (latest, undigested)
         self._index = index if index is not None else {}
-        # path -> (byte offset into _buf, length) for mirror values that
-        # are plain full PUTs: a remote reader can one-sided-read them
-        # straight out of the slot region, no server work. Dropped the
-        # moment the mirror value stops being the raw needle bytes
-        # (range patch, delete, rename); rebuilt on truncation.
+        # path -> (byte offset into _buf, length, checksum) for mirror
+        # values that are plain full PUTs: a remote reader can
+        # one-sided-read them straight out of the slot region, no
+        # server work, and verify the pulled range. The checksum is the
+        # full-value sum (integrity.full_sum — computed from the
+        # decoded entry bytes, i.e. the mirror's truth, one cheap call
+        # on the replication apply path) until the first locate expands
+        # it into the chunk prefix-sum table, validated against that
+        # sum (see locate). Dropped the moment the mirror value stops
+        # being the raw needle bytes (range patch, delete, rename);
+        # rebuilt on truncation.
         self._locs: dict = {}
         self.rkey = next_rkey()  # one-sided region key (see transport)
         self.region_id: Optional[str] = None  # set at registration
@@ -130,7 +137,8 @@ class ReplicaSlot:
             self._mirror_set(e.path, e.data)
             if off is not None:
                 self._locs[e.path] = (
-                    off + _HDR.size + len(e.path.encode()), len(e.data))
+                    off + _HDR.size + len(e.path.encode()), len(e.data),
+                    full_sum(e.data))
             else:
                 self._locs.pop(e.path, None)
         elif e.op == L.OP_DELETE:
@@ -149,15 +157,63 @@ class ReplicaSlot:
                 self._mirror_set(e.data.decode(), val)
 
     def locate(self, path: str) -> Optional[tuple]:
-        """(buf offset, length, rkey) of the path's full value when it
-        is a plain PUT needle in the slot buffer — one-sided readable.
-        The rkey is captured under the slot lock so the triple is
-        internally consistent even if a truncation lands right after."""
+        """(buf offset, length, rkey, prefix CRCs) of the path's full
+        value when it is a plain PUT needle in the slot buffer —
+        one-sided readable and range-verifiable. The rkey is captured
+        under the slot lock so the tuple is internally consistent even
+        if a truncation lands right after."""
         with self._lock:
             loc = self._locs.get(path)
             if loc is None:
                 return None
-            return (loc[0], loc[1], self.rkey)
+            boff, n, pc = loc
+            if isinstance(pc, int):
+                # lazy expansion (see SegmentStore._chunk_sums): the
+                # apply path stored only the full-value sum; expand the
+                # chunk table from the region bytes and validate it
+                # against that sum — on mismatch the region has rotted
+                # and the int is handed back so the caller poisons the
+                # descriptor instead of caching lies
+                expanded = prefix_sums(self._buf[boff:boff + n])
+                if expanded[-1] == pc:
+                    self._locs[path] = (boff, n, expanded)
+                    pc = expanded
+            return (boff, n, self.rkey, pc)
+
+    # -- integrity (scrub/repair surface) ----------------------------------
+    def verify(self, path: str) -> Optional[bool]:
+        """Region bytes of the path's plain-PUT needle still match the
+        chunk CRCs computed at apply time. None when the path has no
+        one-sided location (nothing a remote reader could pull)."""
+        with self._lock:
+            loc = self._locs.get(path)
+            if loc is None:
+                return None
+            boff, n, pc = loc
+            want = pc if isinstance(pc, int) else pc[-1]
+            return full_sum(bytes(self._buf[boff:boff + n])) == want
+
+    def repair_region(self) -> int:
+        """Rewrite the whole region buffer (and its backing file) from
+        the decoded entry mirror — ``Entry.encode`` is deterministic, so
+        the rebuilt bytes equal the originally-replicated stream and
+        every ``_locs`` offset stays valid. Outstanding one-sided
+        handles are failed closed first (rkey bump). Returns the number
+        of bytes rewritten."""
+        with self._lock:
+            self.rkey = next_rkey()
+            fresh = b"".join(e.encode() for e in self.entries)
+            self._buf = bytearray(fresh)
+            self._f.flush()
+            self._f.close()
+            nxt = self.path + ".next"
+            with open(nxt, "wb") as f:
+                f.write(fresh)
+            os.replace(nxt, self.path)
+            self._f = open(self.path, "ab+", buffering=_WRITE_BUF)
+            if self.fsync_data:
+                os.fsync(self._f.fileno())
+            return len(fresh)
 
     # transport sink interface -------------------------------------------------
     def write(self, offset: Optional[int], data: bytes,
@@ -245,7 +301,8 @@ class ReplicaSlot:
         for e, off in zip(self.entries, self._offsets):
             if e.op == L.OP_PUT:
                 self._locs[e.path] = (
-                    off + _HDR.size + len(e.path.encode()), len(e.data))
+                    off + _HDR.size + len(e.path.encode()), len(e.data),
+                    full_sum(e.data))
             elif e.op in (L.OP_DELETE, L.OP_WRITE):
                 self._locs.pop(e.path, None)
             elif e.op == L.OP_RENAME:

@@ -44,9 +44,18 @@ import threading
 import struct
 import time
 import zlib
-from typing import Dict, List, Optional, Tuple
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.integrity import (full_sum, poison_sum, prefix_sums,
+                                  range_sum)
 from repro.core.transport import next_rkey
+
+# a segment accumulating more than this many verified mismatches is
+# presumed to sit on failing media and is quarantined wholesale
+# (salvage live needles, retire the file) instead of being repaired
+# one extent at a time
+QUARANTINE_BUDGET = 3
 
 NEEDLE_MAGIC = 0xA551_6E0D
 N_PUT = 1
@@ -123,6 +132,18 @@ class SegmentStore:
         # compaction reuses segment files, which bumps the key and
         # invalidates every outstanding handle (StaleHandle on read)
         self.rkey = next_rkey()
+        # (segment_id, value_offset) -> checksum metadata: an int (the
+        # full-value sum, computed from the bytes in hand at append/
+        # replay — one cheap call on the write path) until the first
+        # verified-read locate expands it into the chunk prefix-sum
+        # list (integrity.prefix_sums), validated against the stored
+        # full sum so rotten disk bytes never launder into the table
+        # (see _chunk_sums). Keyed physically: renames keep their CRCs.
+        self._crcs: Dict[Tuple[int, int], object] = {}
+        self.mismatches: Counter = Counter()  # segment_id -> verified rot
+        self.quarantine_budget = QUARANTINE_BUDGET
+        self.quarantined_segments = 0
+        self.repairs = 0
         self._read_fds: Dict[int, int] = {}  # segment_id -> O_RDONLY fd
         self._active_id = 0
         self._active = None
@@ -181,6 +202,8 @@ class SegmentStore:
         self._active_off += len(rec)
         self.disk_bytes += len(rec)
         self._dirty = True
+        if op in (N_PUT, N_WRITE):
+            self._crcs[(self._active_id, voff)] = full_sum(data)
         return self._active_id, voff
 
     # -- recovery -----------------------------------------------------------
@@ -210,6 +233,11 @@ class SegmentStore:
             if (zlib.crc32(_NOFF.pack(noff) + p + d) & 0x7FFFFFFF) != crc:
                 break  # corruption: cut the history here
             path = p.decode()
+            if op in (N_PUT, N_WRITE):
+                # rebuild the full-value sum from the needle-CRC-
+                # verified bytes (chunk table expands lazily on locate)
+                self._crcs[(seg_id, off + _NEEDLE.size + plen)] = \
+                    full_sum(d)
             if op == N_PUT:
                 self._index_put(path, seg_id,
                                 off + _NEEDLE.size + plen, dlen)
@@ -363,10 +391,13 @@ class SegmentStore:
     def locate(self, path: str, offset: int = 0,
                length: Optional[int] = None):
         """Resolve a byte range to its physical extent without reading
-        it: ``("loc", addr, n, total, rkey)`` when a single needle
+        it: ``("loc", addr, n, total, rkey, vsum)`` when a single needle
         covers the (clamped) range contiguously — the caller can then
         serve it with a one-sided region read of exactly ``n`` bytes at
-        ``addr`` — ``("frag", total)`` when the path exists but the
+        ``addr``, or a verified read of the chunk-aligned expansion
+        described by ``vsum = (head, ext, c0, c1)`` (integrity.range_sum;
+        None when no chunk CRCs cover the needle) —
+        ``("frag", total)`` when the path exists but the
         range needs patch-chain assembly (or is a zero hole with no
         disk bytes), and ``None`` when the path is absent.
         ``length=None`` means through end-of-value. The rkey is
@@ -382,28 +413,33 @@ class SegmentStore:
             if isinstance(loc, _PatchChain):
                 total = loc.length
                 if offset >= total:
-                    return ("loc", 0, 0, total, self.rkey)
+                    return ("loc", 0, 0, total, self.rkey, None)
                 n = total - offset if length is None \
                     else min(length, total - offset)
                 for boff, seg_id, voff, vlen in reversed(loc.patches):
                     if boff <= offset and offset + n <= boff + vlen:
                         return ("loc",
                                 phys_addr(seg_id, voff + offset - boff),
-                                n, total, self.rkey)
+                                n, total, self.rkey,
+                                self._range_vsum(seg_id, voff, vlen,
+                                                 offset - boff, n))
                     if boff < offset + n and offset < boff + vlen:
                         return ("frag", total)
                 base = loc.base
                 if base is not None and offset + n <= base[2]:
                     return ("loc", phys_addr(base[0], base[1] + offset),
-                            n, total, self.rkey)
+                            n, total, self.rkey,
+                            self._range_vsum(base[0], base[1], base[2],
+                                             offset, n))
                 return ("frag", total)
             seg_id, voff, vlen = loc
             if offset >= vlen:
-                return ("loc", 0, 0, vlen, self.rkey)
+                return ("loc", 0, 0, vlen, self.rkey, None)
             n = vlen - offset if length is None \
                 else min(length, vlen - offset)
             return ("loc", phys_addr(seg_id, voff + offset), n, vlen,
-                    self.rkey)
+                    self.rkey,
+                    self._range_vsum(seg_id, voff, vlen, offset, n))
 
     def read(self, addr: int, size: int) -> bytes:
         """One-sided region read (transport sink interface) at a
@@ -463,6 +499,159 @@ class SegmentStore:
                 if self.fsync_data:
                     os.fsync(self._active.fileno())
                 self._dirty = False
+
+    # -- integrity: verify / repair / quarantine ------------------------------
+    def _chunk_sums(self, seg_id: int, voff: int, vlen: int):
+        """Chunk prefix-sum table for one needle, expanded lazily: the
+        write path stores only the full-value sum (one checksum call);
+        the first verified-read locate expands the table from disk and
+        validates the expansion against the write-time sum, so rotten
+        at-rest bytes cannot launder into it. Returns the list, None
+        (no metadata), or the full-sum int when the expansion failed —
+        the needle is corrupt on disk."""
+        pc = self._crcs.get((seg_id, voff))
+        if not isinstance(pc, int):
+            return pc
+        expanded = prefix_sums(self._read_at(seg_id, voff, vlen))
+        if expanded[-1] != pc:
+            return pc  # rot: keep the write-time sum, don't cache lies
+        self._crcs[(seg_id, voff)] = expanded
+        return expanded
+
+    def _range_vsum(self, seg_id: int, voff: int, vlen: int,
+                    start: int, n: int):
+        """Verification summary for a locate descriptor; a needle whose
+        lazy expansion exposed at-rest rot gets a poison summary, so a
+        verifying client detects it and falls back to the verified RPC
+        (which read-repairs) instead of trusting the pull."""
+        pc = self._chunk_sums(seg_id, voff, vlen)
+        if isinstance(pc, int):
+            return poison_sum(n)
+        return range_sum(pc, vlen, start, n)
+
+    def _loc_units(self, loc) -> List[Tuple[int, int, int]]:
+        """The (segment_id, value_offset, value_length) needles an index
+        entry references (base + every patch for a chain)."""
+        if isinstance(loc, _PatchChain):
+            units = [] if loc.base is None else [loc.base]
+            units.extend((seg_id, voff, vlen)
+                         for _boff, seg_id, voff, vlen in loc.patches)
+            return units
+        return [loc]
+
+    def _verify_loc(self, loc) -> bool:
+        """Disk bytes of every needle the entry references still match
+        their write-time sums (one full-value checksum call per
+        needle)."""
+        for seg_id, voff, vlen in self._loc_units(loc):
+            pc = self._crcs.get((seg_id, voff))
+            if pc is None:
+                continue  # no metadata (shouldn't happen): can't judge
+            want = pc if isinstance(pc, int) else pc[-1]
+            if full_sum(self._read_at(seg_id, voff, vlen)) != want:
+                return False
+        return True
+
+    def verify(self, path: str) -> Optional[bool]:
+        """Scrub check for one path: False = at-rest rot detected.
+        None when the path is absent."""
+        with self._lock:
+            loc = self.index.get(path)
+            if loc is None:
+                return None
+            return self._verify_loc(loc)
+
+    def disk_crc(self, path: str) -> Optional[int]:
+        """CRC32 of the value as currently served from disk (what a
+        reader would get) — the unit of cross-replica checksum
+        exchange. None when absent."""
+        with self._lock:
+            loc = self.index.get(path)
+            if loc is None:
+                return None
+            data = self._assemble(loc) if isinstance(loc, _PatchChain) \
+                else self._read_loc(loc)
+            return zlib.crc32(data)
+
+    def bump_rkey(self) -> None:
+        """Fail outstanding one-sided handles closed (StaleHandle)."""
+        with self._lock:
+            self.rkey = next_rkey()
+
+    def repair(self, path: str, data: bytes,
+               refetch: Optional[Callable[[str], Optional[bytes]]] = None
+               ) -> None:
+        """Rewrite a corrupt extent with verified bytes: append a fresh
+        needle, swap the index, and bump the rkey epoch so any handle
+        still pointing at the rotten bytes fails closed. Charges the old
+        location's segments against the mismatch budget; a segment over
+        budget is quarantined (``refetch`` supplies verified replacement
+        bytes for other paths salvaged out of it)."""
+        with self._lock:
+            old = self.index.get(path)
+            bad_segs = sorted({u[0] for u in self._loc_units(old)}) \
+                if old is not None else []
+            seg_id, voff = self._append(N_PUT, path, data)
+            self._index_put(path, seg_id, voff, len(data))
+            self.commit()
+            self.rkey = next_rkey()
+            self.repairs += 1
+            for s in bad_segs:
+                self.mismatches[s] += 1
+                if self.mismatches[s] > self.quarantine_budget:
+                    self._quarantine(s, refetch)
+
+    def quarantine_segment(self, seg_id: int,
+                           refetch: Optional[Callable[
+                               [str], Optional[bytes]]] = None) -> None:
+        with self._lock:
+            self._quarantine(seg_id, refetch)
+
+    def _quarantine(self, seg_id: int, refetch) -> None:
+        """Retire one segment file: every live entry referencing it is
+        re-verified and re-appended elsewhere (from local bytes when
+        clean, from ``refetch`` — a verified replica read — when not);
+        unsalvageable entries are dropped from the index (the extent is
+        excluded rather than served corrupt). The file is then unlinked
+        and the rkey epoch bumped."""
+        if seg_id == self._active_id:
+            self._rotate()  # never unlink the file we append to
+        if not os.path.exists(self._seg_path(seg_id)):
+            return
+        victims = [
+            p for p, loc in self.index.items()
+            if any(u[0] == seg_id for u in self._loc_units(loc))]
+        for p in victims:
+            loc = self.index[p]
+            data = None
+            if self._verify_loc(loc):
+                data = self._assemble(loc) if isinstance(loc, _PatchChain) \
+                    else self._read_loc(loc)
+            elif refetch is not None:
+                try:
+                    data = refetch(p)
+                except Exception:
+                    data = None
+            if data is None:
+                self._index_drop(p)
+            else:
+                s2, v2 = self._append(N_PUT, p, data)
+                self._index_put(p, s2, v2, len(data))
+        self.commit()
+        fd = self._read_fds.pop(seg_id, None)
+        if fd is not None:
+            os.close(fd)
+        try:
+            size = os.path.getsize(self._seg_path(seg_id))
+            os.remove(self._seg_path(seg_id))
+            self.disk_bytes = max(0, self.disk_bytes - size)
+        except FileNotFoundError:
+            pass
+        for key in [k for k in self._crcs if k[0] == seg_id]:
+            del self._crcs[key]
+        self.mismatches.pop(seg_id, None)
+        self.quarantined_segments += 1
+        self.rkey = next_rkey()
 
     # -- queries (Area-compatible) ---------------------------------------------
     def contains(self, path: str) -> bool:
@@ -525,6 +714,10 @@ class SegmentStore:
                             buffering=_WRITE_BUF)
         self._active_off = 0
         self.disk_bytes = 0
+        # chunk-CRC table and mismatch tallies restart with the fresh
+        # segments (_append repopulates per live needle below)
+        self._crcs.clear()
+        self.mismatches.clear()
         live = sorted(self.index.items(),
                       key=lambda kv: self._loc_key(kv[1]))
         for path, loc in live:  # old-segment order: sequential reads
@@ -619,6 +812,15 @@ class ShardedSegmentStore:
     def delete(self, path: str) -> None:
         self.shard_for(path).delete(path)
 
+    def verify(self, path: str) -> Optional[bool]:
+        return self.shard_for(path).verify(path)
+
+    def disk_crc(self, path: str) -> Optional[int]:
+        return self.shard_for(path).disk_crc(path)
+
+    def repair(self, path: str, data: bytes, refetch=None) -> None:
+        self.shard_for(path).repair(path, data, refetch)
+
     def rename(self, src: str, dst: str) -> None:
         a, b = self.shard_for(src), self.shard_for(dst)
         if a is b:
@@ -659,6 +861,14 @@ class ShardedSegmentStore:
     @property
     def compactions(self) -> int:
         return sum(sh.compactions for sh in self.shards)
+
+    @property
+    def repairs(self) -> int:
+        return sum(sh.repairs for sh in self.shards)
+
+    @property
+    def quarantined_segments(self) -> int:
+        return sum(sh.quarantined_segments for sh in self.shards)
 
     def lru_victims(self, need_bytes: int) -> List[str]:
         """Globally LRU-ordered victims against the aggregate capacity

@@ -23,6 +23,7 @@ from repro.core.cluster import ClusterManager
 from repro.core.extents import ExtentOverlay
 from repro.core.groupcommit import (GroupCommitCoordinator, GroupSlotSink,
                                     frame_batch)
+from repro.core.integrity import poison_sum, range_sum
 from repro.core.leases import LeaseManager, READ, WRITE
 from repro.core.replication import ReplicaSlot
 from repro.core.segstore import (SegmentStore, ShardedSegmentStore,
@@ -70,7 +71,16 @@ class SharedFS:
         self.recovered_epoch = 0
         self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
                       "remote_locates": 0, "invalidated": 0, "bg_jobs": 0,
-                      "promotions": 0}
+                      "promotions": 0,
+                      # integrity subsystem (DESIGN.md §5.3)
+                      "repairs": 0, "repair_failures": 0,
+                      "checksum_exchanges": 0, "scrub_passes": 0,
+                      "scrub_paths": 0, "scrub_errors": 0,
+                      "scrub_repairs": 0, "scrub_disagreements": 0}
+        # background scrub daemon state (start_scrub/stop_scrub)
+        self._scrub_thread: Optional[threading.Thread] = None
+        self._scrub_stop: Optional[threading.Event] = None
+        self._scrub_cursor = 0
         # persistent areas are one-sided readable: a remote LibFS
         # resolves a (path, range) to a physical extent via locate(),
         # then pulls exactly those bytes with Transport.one_sided_read —
@@ -166,6 +176,7 @@ class SharedFS:
         queued jobs are skipped instead of run (a dead node must not
         keep digesting), and the join is best-effort."""
         self._abandon = abandon
+        self.stop_scrub()
         me = threading.current_thread()
         for i, t in enumerate(self._digest_threads):
             if t is not None and t.is_alive() and t is not me:
@@ -568,10 +579,16 @@ class SharedFS:
                 return self._inline_desc(bytes(v), offset, length)
             loc = slot.locate(path)
             if loc is not None and slot.region_id is not None:
-                boff, n, rkey = loc
+                boff, n, rkey, pc = loc
                 lo = min(offset, n)
                 ln = (n - lo) if length is None else min(length, n - lo)
-                return ("val", slot.region_id, boff + lo, ln, n, rkey)
+                # an int pc means the slot's lazy chunk-table expansion
+                # found rot: poison the summary so a verifying client
+                # detects and falls back instead of trusting the pull
+                vsum = (poison_sum(ln) if isinstance(pc, int)
+                        else range_sum(pc, n, lo, ln))
+                return ("val", slot.region_id, boff + lo, ln, n, rkey,
+                        vsum)
             return self._inline_desc(v, offset, length)
         if self._digest_shards > 1:
             i = self.hot.shard_index(path)
@@ -583,8 +600,8 @@ class SharedFS:
             if d is None:
                 continue
             if d[0] == "loc":
-                _, addr, n, total, rkey = d
-                return ("val", rid, addr, n, total, rkey)
+                _, addr, n, total, rkey, vsum = d
+                return ("val", rid, addr, n, total, rkey, vsum)
             total = d[1]  # fragmented (patch chain): range-assemble here
             ln = max(0, total - offset) if length is None else length
             data = area.get_range(path, offset, ln)
@@ -596,9 +613,13 @@ class SharedFS:
         """RPC: resolve a read to a one-sided-readable descriptor.
 
         Returns one of
-          ``("val", region_id, off, n, total, rkey)`` — the caller pulls
-            ``n`` bytes at ``off`` from the region with
-            ``Transport.one_sided_read`` (rkey-guarded);
+          ``("val", region_id, off, n, total, rkey, vsum)`` — the caller
+            pulls ``n`` bytes at ``off`` from the region with
+            ``Transport.one_sided_read`` (rkey-guarded) — or, with
+            verification on, the chunk-aligned expansion described by
+            ``vsum = (head, ext, c0, c1)`` (integrity.range_sum; None
+            when the extent carries no chunk CRCs), checking the pull
+            client-side before trusting a single byte of it;
           ``("inline", bytes, total)`` — the *ranged* bytes, answered
             inline because no single physical extent covers them
             (overlay/patch-chain assembly, zero holes);
@@ -615,6 +636,254 @@ class SharedFS:
         readahead path) — descriptors in request order."""
         self.stats["remote_locates"] += 1
         return [self._locate_one(p, off, ln) for p, off, ln in reqs]
+
+    # -- integrity: verify-on-read fallback, read-repair, scrub (§5.3) --------
+    def _verify_local(self, path: str) -> Optional[bool]:
+        """Do this node's own bytes for ``path`` still match their
+        chunk CRCs, across every surface that can serve them (slot
+        region, hot, cold)? False on any mismatch; None when the path
+        is nowhere local."""
+        ok: Optional[bool] = None
+        slot = self.slot_index.get(path)
+        if slot is not None:
+            r = slot.verify(path)
+            if r is False:
+                return False
+            if r is not None:
+                ok = True
+        for area in (self.hot, self.cold):
+            if area.contains(path):
+                if area.verify(path) is False:
+                    return False
+                ok = True
+        return ok
+
+    def read_checked(self, path: str) -> Tuple[bool, Optional[bytes]]:
+        """RPC: remote-serving full read that verifies this node's own
+        copy first and reports a **miss** rather than serving rotten
+        bytes — the peer side of read-repair. Deliberately non-
+        recursive (no repair, no fetch): a rotten peer answering a
+        repair must not start a repair of its own mid-call, or two
+        rotten replicas would recurse; its own scrub fixes it."""
+        self.stats["remote_reads"] += 1
+        if self._verify_local(path) is False:
+            return False, None
+        return self.read_any(path, fetch_base=False)
+
+    def read_verified(self, path: str, offset: int,
+                      length: Optional[int]
+                      ) -> Tuple[bool, Optional[bytes]]:
+        """RPC: the client's fallback after a one-sided read failed its
+        checksum. Verify this node's own copy; if it rotted at rest,
+        read-repair it from the replica chain first; then serve the
+        range through the RPC path (whose payload is not subject to
+        one-sided in-flight faults). The client gets verified bytes —
+        or a miss when the extent was unsalvageable — never the
+        corrupt ones."""
+        self.stats["remote_reads"] += 1
+        if self._verify_local(path) is False:
+            self.repair_path(path)
+        if length is None:
+            found, v = self.read_any(path, fetch_base=False)
+            if not found or v is None:
+                return found, v
+            return True, v[offset:]
+        return self.read_range(path, offset, length, fetch_base=False)
+
+    def _peer_verified(self, path: str) -> Tuple[bool, Optional[bytes]]:
+        """``(found, value)`` from the first chain/reserve peer whose
+        own copy passes verification (``read_checked``); value None =
+        an authoritative tombstone. ``(False, None)`` when no intact
+        replica answered."""
+        peers = self.cluster.chain_for(path) \
+            + self.cluster.reserves.get("/", [])
+        seen = set()
+        for nid in peers:
+            if nid == self.node_id or nid in seen:
+                continue
+            seen.add(nid)
+            try:
+                found, v = with_retries(
+                    lambda n=nid: self.transport.rpc(n, "read_checked",
+                                                     path),
+                    stats=self.transport.stats)
+            except Exception:
+                continue
+            if found:
+                return True, v
+        return False, None
+
+    def _refetch_verified(self, path: str) -> Optional[bytes]:
+        """Quarantine-salvage callback (``SegmentStore.repair``):
+        verified replica bytes, or None when unsalvageable."""
+        found, v = self._peer_verified(path)
+        return v if found else None
+
+    def repair_path(self, path: str) -> bool:
+        """Read-repair one path on this node. Slot-region rot rebuilds
+        from the decoded entry mirror (local, exact). Area rot
+        re-fetches verified bytes from the replica chain and rewrites
+        the extent (fresh needle + rkey bump, so outstanding one-sided
+        handles fail closed; segments over the mismatch budget are
+        quarantined). When no intact replica exists — or the intact
+        answer is a tombstone — the local copy is dropped: the corrupt
+        extent is *excluded*, never served."""
+        repaired = False
+        slot = self.slot_index.get(path)
+        if slot is not None and slot.verify(path) is False:
+            slot.repair_region()
+            self.stats["repairs"] += 1
+            repaired = True
+        for area in (self.hot, self.cold):
+            if not area.contains(path) or area.verify(path) is not False:
+                continue
+            found, good = self._peer_verified(path)
+            if found and good is not None:
+                area.repair(path, good, refetch=self._refetch_verified)
+                self.stats["repairs"] += 1
+                repaired = True
+            else:
+                area.delete(path)
+                if found:  # tombstone: the value is deleted cluster-wide
+                    self.stats["repairs"] += 1
+                    repaired = True
+                else:
+                    self.stats["repair_failures"] += 1
+        with self._commit_lock:
+            self._commit_areas()
+        return repaired
+
+    def scrub_path(self, path: str) -> bool:
+        """RPC: verify one path locally, repair from replicas if rotten
+        (a peer's scrub telling us our checksum disagrees)."""
+        if self._verify_local(path) is False:
+            return self.repair_path(path)
+        return False
+
+    def _value_crcs(self, paths: List[str]) -> List[Optional[int]]:
+        out: List[Optional[int]] = []
+        for p in paths:
+            found, v = self.read_any(p, fetch_base=False)
+            out.append(None if not found
+                       else (-1 if v is None else zlib.crc32(v)))
+        return out
+
+    def checksum_exchange(self, paths: List[str]) -> List[Optional[int]]:
+        """RPC: CRC32 of the value this node would serve for each path.
+        Integers only — the scrub happy path compares replicas without
+        a single payload byte on the wire. -1 encodes a tombstone,
+        None a miss."""
+        self.stats["checksum_exchanges"] += 1
+        return self._value_crcs(paths)
+
+    def scrub_now(self, max_paths: Optional[int] = None,
+                  exchange: bool = True) -> Dict[str, int]:
+        """One synchronous scrub pass (the daemon calls this throttled):
+
+        1. every replica slot's region bytes vs their apply-time CRCs
+           (rot there rebuilds the region from the entry mirror);
+        2. up to ``max_paths`` hot/cold paths (resumable cursor) vs
+           their chunk CRCs, feeding ``repair_path`` on mismatch;
+        3. optional cross-replica checksum exchange over the same batch
+           — CRC integers only — telling a disagreeing peer whose own
+           copy is rotten to scrub itself (``scrub_path``).
+
+        Returns this pass's counters; cumulative ones live in
+        ``stats`` (surfaced through ``harness.integrity_stats``)."""
+        scanned = errors = repaired = disagree = 0
+        for slot in list(self.slots.values()):
+            for p in list(slot._locs):
+                scanned += 1
+                if slot.verify(p) is False:
+                    errors += 1
+                    slot.repair_region()
+                    self.stats["repairs"] += 1
+                    repaired += 1
+        paths = sorted(set(self.hot.paths()) | set(self.cold.paths()))
+        if max_paths is not None and paths:
+            start = self._scrub_cursor % len(paths)
+            take = min(max_paths, len(paths))
+            batch = [paths[(start + i) % len(paths)] for i in range(take)]
+            self._scrub_cursor = (start + take) % len(paths)
+        else:
+            batch = paths
+        for p in batch:
+            scanned += 1
+            if any(area.contains(p) and area.verify(p) is False
+                   for area in (self.hot, self.cold)):
+                errors += 1
+                if self.repair_path(p):
+                    repaired += 1
+        if exchange and batch:
+            mine = self._value_crcs(batch)
+            peers: List[str] = []
+            for p in batch:
+                for nid in self.cluster.chain_for(p):
+                    if nid != self.node_id and nid not in peers:
+                        peers.append(nid)
+            for nid in peers:
+                try:
+                    theirs = with_retries(
+                        lambda n=nid: self.transport.rpc(
+                            n, "checksum_exchange", batch),
+                        stats=self.transport.stats)
+                except Exception:
+                    continue
+                for p, a, b in zip(batch, mine, theirs):
+                    if a is None or b is None or a == b:
+                        continue
+                    disagree += 1
+                    if self._verify_local(p) is not False:
+                        # our bytes check out: the peer's rotted
+                        try:
+                            with_retries(
+                                lambda n=nid: self.transport.rpc(
+                                    n, "scrub_path", p),
+                                stats=self.transport.stats)
+                        except Exception:
+                            pass
+        self.stats["scrub_passes"] += 1
+        self.stats["scrub_paths"] += scanned
+        self.stats["scrub_errors"] += errors
+        self.stats["scrub_repairs"] += repaired
+        self.stats["scrub_disagreements"] += disagree
+        return {"scanned": scanned, "errors": errors,
+                "repaired": repaired, "disagreements": disagree}
+
+    def start_scrub(self, interval_s: float = 0.01, batch: int = 64,
+                    exchange: bool = False) -> None:
+        """Throttled background scrub worker: one ``scrub_now`` batch
+        per interval, walking the namespace round-robin via the resume
+        cursor. Off by default — tests and benches call ``scrub_now``
+        synchronously; the daemon is the deployment shape."""
+        if self._scrub_thread is not None \
+                and self._scrub_thread.is_alive():
+            return
+        stop = threading.Event()
+        self._scrub_stop = stop
+
+        def _loop():
+            while not stop.wait(interval_s):
+                if self._abandon:
+                    return
+                try:
+                    self.scrub_now(max_paths=batch, exchange=exchange)
+                except Exception:
+                    pass  # a dying peer mid-pass: next pass retries
+
+        t = threading.Thread(target=_loop,
+                             name=f"scrub-{self.node_id}", daemon=True)
+        self._scrub_thread = t
+        t.start()
+
+    def stop_scrub(self) -> None:
+        if self._scrub_stop is not None:
+            self._scrub_stop.set()
+        t = self._scrub_thread
+        if t is not None and t.is_alive() \
+                and t is not threading.current_thread():
+            t.join(timeout=1.0)
+        self._scrub_thread = None
 
     # -- leases -------------------------------------------------------------------
     def lease_acquire(self, holder: str, path: str, mode: str,

@@ -37,6 +37,7 @@ steady-state per-op lease cost is one dict probe.
 from __future__ import annotations
 
 import threading
+import zlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -206,7 +207,7 @@ class LibState:
                  fsync_data: bool = False, pipeline_digests: bool = True,
                  one_sided_reads: bool = True, remote_batch: int = 32,
                  start_seqno: int = 0, settle_before_digest: bool = False,
-                 group_commit: bool = True):
+                 group_commit: bool = True, verify_reads: bool = True):
         assert mode in ("pessimistic", "optimistic")
         self.proc_id = proc_id
         self.sfs = sharedfs
@@ -243,6 +244,11 @@ class LibState:
         # one_sided_reads=False restores the pre-fig14 whole-blob
         # read_remote RPC per peer (the same-run comparison toggle)
         self.one_sided_reads = one_sided_reads
+        # verify_reads=False trusts one-sided payloads as pulled (the
+        # fig18 overhead-comparison toggle); on, every pull with a
+        # checksum descriptor is verified client-side before a byte of
+        # it is returned or cached
+        self.verify_reads = verify_reads
         self.remote_batch = remote_batch
         # negative-lookup cache: paths known absent below L1 at a given
         # cluster epoch. An entry short-circuits the remote peer walk;
@@ -280,7 +286,8 @@ class LibState:
                       "seals": 0, "backpressure_waits": 0,
                       "seal_deferrals": 0,
                       "coalesced_out": 0, "lease_cache_hits": 0,
-                      "lease_acquires": 0}
+                      "lease_acquires": 0,
+                      "verified_reads": 0, "corrupt_extents": 0}
 
     # -- epoch migration (paper §3.4: leases migrate via the epoch bump) ------
     def _check_epoch(self) -> None:
@@ -531,7 +538,18 @@ class LibState:
                       length: Optional[int]):
         """(found, value) from a locate descriptor (see
         ``SharedFS.locate``); stale one-sided handles fall back to the
-        ranged read RPC."""
+        ranged read RPC.
+
+        With ``verify_reads`` on and a checksum summary in the
+        descriptor, the one-sided pull covers the chunk-aligned
+        expansion of the range and is checked client-side with a single
+        chained-CRC call before the requested slice is returned — a
+        flipped bit at rest or in flight, or a torn payload, raises
+        ``CorruptExtent`` internally and the read retries through
+        ``read_verified`` (an RPC: its payload is not subject to
+        one-sided payload faults, and the serving node read-repairs
+        at-rest rot before answering). Corruption is therefore never
+        visible to a caller, only to the counters."""
         kind = desc[0]
         if kind == "miss":
             return False, None
@@ -539,10 +557,23 @@ class LibState:
             return True, None
         if kind == "inline":
             return True, desc[1]
-        _, region, off, n, _total, rkey = desc
+        _, region, off, n, _total, rkey, vsum = desc
         if n == 0:
             return True, b""
+        verify = self.verify_reads and vsum is not None
         try:
+            if verify:
+                head, ext, c0, c1 = vsum
+                buf = self.transport.one_sided_read(
+                    nid, region, off - head, ext, rkey=rkey)
+                # inlined verify_range: this runs once per verified
+                # one-sided read and is the fig18 <=1.1x p99 hot path
+                if len(buf) != ext or zlib.adler32(buf, c0) != c1:
+                    self.stats["corrupt_extents"] += 1
+                    return self.transport.rpc(nid, "read_verified",
+                                              path, offset, length)
+                self.stats["verified_reads"] += 1
+                return True, bytes(buf[head:head + n])
             return True, self.transport.one_sided_read(nid, region, off,
                                                        n, rkey=rkey)
         except StaleHandle:

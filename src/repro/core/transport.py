@@ -24,6 +24,7 @@ Swapping this class for a real ICI/DCN transport changes no caller code.
 from __future__ import annotations
 
 import itertools
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -45,12 +46,19 @@ class RpcTimeout(RuntimeError):
 
 
 def with_retries(fn, *, attempts: int = 4, backoff_s: float = 2e-4,
-                 retriable=(RpcTimeout,), stats: "TransportStats" = None):
-    """Bounded retry with exponential backoff for transient transport
-    faults. ``fn`` must be idempotent at the receiver (chain appends
-    dedup by seqno, digests re-apply cleanly, lease grants refresh).
-    ``NodeDown`` is deliberately NOT retriable by default: a dead peer
-    needs failure detection + chain repair, not a retry storm."""
+                 retriable=(RpcTimeout,), stats: "TransportStats" = None,
+                 jitter: float = 0.5, rng=random):
+    """Bounded retry with jittered exponential backoff for transient
+    transport faults. ``fn`` must be idempotent at the receiver (chain
+    appends dedup by seqno, digests re-apply cleanly, lease grants
+    refresh). ``NodeDown`` is deliberately NOT retriable by default: a
+    dead peer needs failure detection + chain repair, not a retry storm.
+
+    Each sleep is scaled by a uniform draw from ``[1-jitter, 1]``:
+    concurrent callers that hit the same dead hop in the same instant
+    would otherwise back off in lockstep and re-collide on every round
+    (a synchronized retry storm); decorrelating the delays spreads the
+    retries across the window while keeping the exponential envelope."""
     delay = backoff_s
     for k in range(attempts):
         try:
@@ -61,7 +69,8 @@ def with_retries(fn, *, attempts: int = 4, backoff_s: float = 2e-4,
             if stats is not None:
                 stats.retries += 1
             if delay > 0:
-                time.sleep(delay)
+                scale = 1.0 - jitter * rng.random() if jitter > 0 else 1.0
+                time.sleep(delay * scale)
                 delay *= 2
 
 
@@ -268,4 +277,15 @@ class Transport:
             raise
         if rkey is not None and getattr(sink, "rkey", None) != rkey:
             raise StaleHandle(f"{region_id}@{dst} rkey={rkey}")
+        if act == "corrupt" and data:
+            # in-flight bit flip: the payload of a one-sided read is
+            # raw memory with no protocol-level CRC, so the receiver
+            # sees silently wrong bytes unless it verifies them itself
+            i = inj.rng.randrange(len(data))
+            data = data[:i] \
+                + bytes([data[i] ^ (1 << inj.rng.randrange(8))]) \
+                + data[i + 1:]
+        elif act == "torn" and data:
+            # torn completion: a prefix of the payload arrives
+            data = data[:inj.rng.randrange(len(data))]
         return data

@@ -84,6 +84,40 @@ def test_with_retries_bounded_and_not_retrying_nodedown():
     assert calls["n"] == 1  # no retry storm at a dead peer
 
 
+def test_with_retries_backoff_is_jittered_within_envelope(monkeypatch):
+    """Each backoff sleep is drawn uniformly from [(1-jitter)*d, d]:
+    stays under the exponential envelope, never collapses below half of
+    it, and decorrelates concurrent callers (different rngs => different
+    schedules). jitter=0 restores the exact deterministic ladder."""
+    import random as _random
+
+    from repro.core import transport as T
+
+    sleeps = []
+    monkeypatch.setattr(T.time, "sleep", lambda s: sleeps.append(s))
+
+    def always():
+        raise RpcTimeout("x")
+
+    def run(**kw):
+        sleeps.clear()
+        with pytest.raises(RpcTimeout):
+            with_retries(always, attempts=4, backoff_s=1e-3, **kw)
+        return list(sleeps)
+
+    nominal = [1e-3, 2e-3, 4e-3]
+    a = run(rng=_random.Random(42))
+    assert len(a) == 3
+    for s, nom in zip(a, nominal):
+        assert nom * 0.5 <= s <= nom, (s, nom)
+    assert a != nominal, "jitter must perturb the schedule"
+    # different rng streams decorrelate (no synchronized retry storm)
+    assert run(rng=_random.Random(1)) != run(rng=_random.Random(2))
+    # same seed reproduces exactly (deterministic tests stay possible)
+    assert run(rng=_random.Random(5)) == run(rng=_random.Random(5))
+    assert run(jitter=0.0) == nominal
+
+
 # -- transport integration ---------------------------------------------------
 
 def test_dropped_chain_rpc_is_retried_transparently(cluster):

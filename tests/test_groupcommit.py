@@ -5,7 +5,7 @@ import time
 
 import pytest
 
-from repro.core import AssiseCluster, Fault
+from repro.core import AssiseCluster, BitRot, Fault, JournalCorruption
 from repro.core import log as L
 from repro.core.groupcommit import (CommitJournal, frame_batch,
                                     unframe_batch)
@@ -75,7 +75,7 @@ def test_group_batch_ships_each_entry_exactly_once(gcluster):
     # each writer fsyncs after every put, so every (batch, member) pair
     # carries at least one pending entry -> one 6-byte frame header plus
     # the 2-byte proc id ("p0".."p2") per batched member
-    frame_overhead = gc.stats["batched_members"] * (6 + 2)
+    frame_overhead = gc.stats["batched_members"] * (10 + 2)
     shipped = sum(n for _, region, n in calls
                   if region.startswith("gslot/"))
     assert shipped == entry_bytes + frame_overhead
@@ -210,6 +210,41 @@ def test_commit_journal_replay_recovers_entries(tmp_path):
     assert [e.seqno for e in rep["pa"]] == [1, 2, 3, 1]
     assert [e.path for e in rep["pb"]] == ["/b/k0", "/b/k1"]
     assert all(e.data == b"d" * 8 for e in rep["pa"])
+
+
+def test_replay_distinguishes_torn_tail_from_mid_journal_rot(tmp_path):
+    """A CRC-bad *last* frame is a torn tail (crash mid-append): the
+    valid prefix replays. A CRC-bad frame *followed by* valid frames is
+    media corruption — silently dropping acked commits would lose data,
+    so replay must refuse (JournalCorruption) and force re-resolution
+    from the replicas instead."""
+    payload = b"".join(e.encode() for e in _entries("a", 3))
+
+    def fresh(name, nframes):
+        j = CommitJournal(str(tmp_path / name), capacity=1 << 16)
+        for k in range(nframes):
+            j.append_commit(frame_batch([(f"p{k}", payload)]))
+        return j
+
+    # torn tail: last frame rots -> prefix-cut, no exception
+    j = fresh("torn.journal", 3)
+    assert BitRot(seed=5).flip_in_journal(j, frame=2) == 2
+    rep = j.replay()
+    assert sorted(rep) == ["p0", "p1"]
+    assert [e.seqno for e in rep["p0"]] == [1, 2, 3]
+    j.close()
+
+    # mid-journal: an earlier frame rots while later frames are valid
+    j = fresh("mid.journal", 3)
+    assert BitRot(seed=5).flip_in_journal(j, frame=1) == 1
+    with pytest.raises(JournalCorruption):
+        j.replay()
+    j.close()
+
+    # clean ring still replays everything
+    j = fresh("ok.journal", 3)
+    assert sorted(j.replay()) == ["p0", "p1", "p2"]
+    j.close()
 
 
 def test_journal_covers_member_log_tail(gcluster):

@@ -1,0 +1,327 @@
+"""End-to-end data integrity (PR 8): chunk-CRC metadata, self-verifying
+one-sided reads, in-flight + at-rest corruption detection, read-repair,
+segment quarantine, and the cross-replica scrub."""
+import os
+import zlib
+
+import pytest
+
+from repro.core import AssiseCluster, BitRot, CorruptExtent, Fault
+from repro.core.integrity import (CHUNK, prefix_sums, range_sum,
+                                  value_sum, verify_range)
+from repro.core.segstore import SegmentStore
+
+
+# -- checksum primitives ------------------------------------------------------
+
+def test_prefix_sums_chain_and_full_value():
+    val = bytes(range(256)) * 5  # 1280 = 10 chunks
+    pc = prefix_sums(val)
+    assert len(pc) == len(val) // CHUNK + 1
+    assert value_sum(pc) == zlib.adler32(val)
+    for k in (1, 3, 7):
+        assert pc[k] == zlib.adler32(val[:k * CHUNK])
+    # the chaining identity the one-call verify relies on:
+    # adler32(window, sum_of_prefix) == sum_of(prefix + window)
+    assert zlib.adler32(val[CHUNK:4 * CHUNK], pc[1]) == pc[4]
+
+
+def test_range_sum_aligned_reads_have_zero_expansion():
+    val = b"x" * 4096
+    pc = prefix_sums(val)
+    assert range_sum(pc, 4096, 0, 4096) == (0, 4096, pc[0], pc[-1])
+    assert range_sum(pc, 4096, CHUNK, CHUNK) == (0, CHUNK, pc[1], pc[2])
+
+
+def test_range_sum_misaligned_and_verify_roundtrip():
+    val = bytes(range(250)) * 4  # 1000 bytes, last chunk partial
+    pc = prefix_sums(val)
+    vsum = range_sum(pc, len(val), 130, 10)
+    head, ext, c0, c1 = vsum
+    assert head == 2 and ext == CHUNK and c0 == pc[1]
+    window = val[130 - head:130 - head + ext]
+    assert verify_range(window, vsum, 10) == val[130:140]
+    # tail range clamps the expansion at the value end
+    vsum = range_sum(pc, len(val), 900, 100)
+    head, ext, c0, c1 = vsum
+    assert 900 - head + ext == len(val) and c1 == pc[-1]
+    window = val[900 - head:]
+    assert verify_range(window, vsum, 100) == val[900:]
+
+
+def test_range_sum_unverifiable_cases():
+    pc = prefix_sums(b"x" * 100)
+    assert range_sum(None, 100, 0, 10) is None
+    assert range_sum(pc, 100, 0, 0) is None          # empty range
+    assert range_sum(pc, 100, 90, 20) is None        # overruns the value
+    assert range_sum(pc[:1], 100, 0, 10) is None     # truncated table
+
+
+def test_verify_range_raises_on_rot_and_torn():
+    val = bytes(range(256))
+    pc = prefix_sums(val)
+    vsum = range_sum(pc, 256, 10, 20)
+    head, ext, _, _ = vsum
+    window = bytearray(val[10 - head:10 - head + ext])
+    assert verify_range(bytes(window), vsum, 20) == val[10:30]
+    window[5] ^= 0x40
+    with pytest.raises(CorruptExtent):
+        verify_range(bytes(window), vsum, 20)
+    with pytest.raises(CorruptExtent):
+        verify_range(val[:ext - 1], vsum, 20)  # torn (short) window
+
+
+# -- SegmentStore: at-rest detection, repair, quarantine ----------------------
+
+def test_segstore_detects_and_repairs_bit_rot(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"))
+    val = bytes(range(256)) * 2
+    s.put("/x", val)
+    assert s.verify("/x") is True and s.verify("/nope") is None
+    rot = BitRot(seed=7)
+    assert rot.flip_in_store(s, "/x")
+    assert s.verify("/x") is False
+    assert s.disk_crc("/x") != zlib.crc32(val)
+    rk = s.rkey
+    s.repair("/x", val)
+    assert s.verify("/x") is True and s.get("/x") == val
+    assert s.rkey != rk, "repair must fail outstanding handles closed"
+    assert s.repairs == 1
+    s.close()
+
+
+def test_segstore_quarantine_over_mismatch_budget(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"))
+    s.quarantine_budget = 0  # first strike retires the segment
+    a, b = b"A" * 300, b"B" * 300
+    s.put("/a", a)
+    s.put("/b", b)  # same active segment as /a
+    bad_seg = s.index["/a"][0]
+    rot = BitRot(seed=3)
+    assert rot.flip_in_store(s, "/a")
+    s.repair("/a", a)
+    assert s.quarantined_segments == 1
+    assert not os.path.exists(s._seg_path(bad_seg))
+    # both paths survived: /a from the verified repair bytes, /b
+    # salvaged out of the retiring segment from its own clean needle
+    assert s.get("/a") == a and s.get("/b") == b
+    assert s.verify("/a") is True and s.verify("/b") is True
+    s.close()
+
+
+def test_segstore_quarantine_drops_unsalvageable(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"))
+    s.put("/a", b"A" * 300)
+    s.put("/b", b"B" * 300)
+    rot = BitRot(seed=5)
+    assert rot.flip_in_store(s, "/b")
+    seg = s.index["/b"][0]
+    # no refetch source: the rotten extent is excluded, never served
+    s.quarantine_segment(seg)
+    assert s.get("/b") is None
+    assert s.get("/a") == b"A" * 300
+    s.close()
+
+
+def test_segstore_chunk_table_expands_lazily_and_poisons_rot(tmp_path):
+    s = SegmentStore(str(tmp_path / "seg"))
+    val = bytes(range(256)) * 4  # 1024B = 8 chunks
+    s.put("/x", val)
+    s.put("/y", val)
+    # write path stores only the full-value sum (one checksum call)
+    key = (s.index["/x"][0], s.index["/x"][1])
+    assert isinstance(s._crcs[key], int)
+    # first locate expands the table from disk, validated, and caches it
+    kind, _addr, n, _tot, _rk, vsum = s.locate("/x", 128, 256)
+    assert kind == "loc" and vsum is not None and vsum[3] != -1
+    assert isinstance(s._crcs[key], list)
+    assert verify_range(val[128:384], vsum, 256) == val[128:384]
+    # a needle that rots BEFORE its first locate: the expansion fails
+    # its full-sum check and the descriptor is poisoned — a verifying
+    # client can never accept the pull
+    assert BitRot(seed=9).flip_in_store(s, "/y")
+    ykey = (s.index["/y"][0], s.index["/y"][1])
+    kind, _addr, n, _tot, _rk, vsum = s.locate("/y", 0, 256)
+    assert vsum == (0, 256, 0, -1)
+    assert isinstance(s._crcs[ykey], int), "rot must not cache a table"
+    with pytest.raises(CorruptExtent):
+        verify_range(s.get("/y")[:256], vsum, 256)
+    s.close()
+
+
+# -- cluster: in-flight + at-rest corruption on the read path -----------------
+
+@pytest.fixture()
+def remote_reader(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=3, replication=2)
+    w = c.open_process("w", "node0")
+    r = c.open_process("r", "node2")  # off-chain: reads cross the wire
+    yield c, w, r
+    c.close()
+
+
+def test_inflight_corruption_detected_and_reread(remote_reader):
+    c, w, r = remote_reader
+    val = bytes(range(256)) * 64  # 16KB
+    w.put("/if/x", val)
+    w.digest()
+    c.inject_faults([Fault("corrupt", op="read", count=1)])
+    assert r.get_range("/if/x", 1000, 2000) == val[1000:3000]
+    assert r.stats["corrupt_extents"] == 1
+    assert r.stats["verified_reads"] == 0  # the poisoned pull never counts
+    c.clear_faults()
+    assert r.get_range("/if/x", 100, 50) == val[100:150]
+    assert r.stats["verified_reads"] == 1
+
+
+def test_inflight_torn_read_detected(remote_reader):
+    c, w, r = remote_reader
+    val = b"t" * 8192
+    w.put("/if/t", val)
+    w.digest()
+    c.inject_faults([Fault("torn", op="read", count=1)])
+    assert r.get_range("/if/t", 0, 4096) == val[:4096]
+    assert r.stats["corrupt_extents"] == 1
+
+
+def test_verify_reads_off_serves_rot_silently(tmp_path):
+    """The fig18 same-run baseline: without verification the corrupt
+    payload reaches the caller (this is the hole §5.3 closes)."""
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=3, replication=2)
+    try:
+        w = c.open_process("w", "node0")
+        r = c.open_process("r", "node2", verify_reads=False)
+        val = bytes(range(256)) * 16
+        w.put("/u/x", val)
+        w.digest()
+        c.inject_faults([Fault("corrupt", op="read", count=1)])
+        got = r.get_range("/u/x", 0, 4096)
+        assert got != val[:4096] and len(got) == 4096
+        assert r.stats["corrupt_extents"] == 0
+    finally:
+        c.close()
+
+
+def test_at_rest_rot_triggers_read_repair(remote_reader):
+    c, w, r = remote_reader
+    val = bytes(range(256)) * 32  # 8KB
+    w.put("/ar/x", val)
+    w.digest()  # digested on node0 AND node1 (chain)
+    assert c.corrupt_at_rest("node0", "/ar/x", seed=11)
+    sfs0 = c.sharedfs["node0"]
+    assert sfs0.hot.verify("/ar/x") is False
+    # the client detects the rotten pull (full-value read: the window
+    # covers whichever byte rotted), falls back to the verified RPC,
+    # and the serving node read-repairs from its chain peer
+    assert r.get("/ar/x") == val
+    assert r.stats["corrupt_extents"] == 1
+    assert sfs0.hot.verify("/ar/x") is True
+    assert sfs0.hot.get("/ar/x") == val
+    st = c.integrity_stats()
+    assert st["repairs"] >= 1 and st["corrupt_extents"] == 1
+
+
+def test_scrub_repairs_silent_rot_and_chains_agree(remote_reader):
+    c, w, r = remote_reader
+    vals = {f"/sc/{i}": bytes([i]) * 4096 for i in range(6)}
+    for p, v in vals.items():
+        w.put(p, v)
+    w.digest()
+    rot = BitRot(seed=2)
+    assert c.corrupt_at_rest("node1", "/sc/3", rot=rot)
+    assert c.corrupt_at_rest("node1", "/sc/5", rot=rot)
+    # exchange off: each node must self-detect its own rot from the
+    # local chunk CRCs alone
+    res = c.scrub_all(exchange=False)
+    assert res["errors"] == 2 and res["repaired"] == 2
+    for nid in ("node0", "node1"):
+        sfs = c.sharedfs[nid]
+        for p, v in vals.items():
+            assert sfs.hot.verify(p) is True
+            assert sfs.hot.get(p) == v
+    # chain agreement: a second exchange pass finds nothing to argue
+    res = c.scrub_all(exchange=True)
+    assert res["errors"] == 0 and res["disagreements"] == 0
+
+
+def test_checksum_exchange_tells_rotten_peer_to_self_repair(remote_reader):
+    """Scrub run only on the clean replica: the CRC exchange (integers
+    only, no payload bytes) flags the divergence and the rotten peer
+    repairs itself via scrub_path."""
+    c, w, r = remote_reader
+    val = b"e" * 4096
+    w.put("/ex/x", val)
+    w.digest()
+    assert c.corrupt_at_rest("node1", "/ex/x", seed=9)
+    tr = c.transport.stats
+    sent0 = tr.bytes_sent
+    res = c.sharedfs["node0"].scrub_now(exchange=True)
+    assert res["disagreements"] >= 1
+    assert c.sharedfs["node1"].hot.verify("/ex/x") is True
+    assert c.sharedfs["node1"].hot.get("/ex/x") == val
+    # the repair itself moves bytes; the exchange that found it did not
+    assert c.sharedfs["node1"].stats["repairs"] >= 1
+    del sent0, tr
+
+
+def test_unsalvageable_extent_excluded_not_served(tmp_path):
+    c = AssiseCluster(str(tmp_path / "c"), n_nodes=2, replication=1)
+    try:
+        w = c.open_process("w", "node0")
+        w.put("/solo/x", b"s" * 2048)
+        w.digest()
+        assert c.corrupt_at_rest("node0", "/solo/x", seed=4)
+        sfs = c.sharedfs["node0"]
+        res = sfs.scrub_now(exchange=False)
+        assert res["errors"] == 1 and res["repaired"] == 0
+        # replication=1: no intact replica exists -> drop, never serve
+        assert not sfs.hot.contains("/solo/x")
+        assert sfs.stats["repair_failures"] == 1
+    finally:
+        c.close()
+
+
+def test_slot_region_rot_repaired_from_entry_mirror(remote_reader):
+    c, w, r = remote_reader
+    val = bytes(range(256)) * 8
+    w.put("/sl/x", val)  # undigested: lives in the replica slots
+    w.fsync()            # chain-replicate without digesting
+    assert c.corrupt_slot("node1", "w", "/sl/x", seed=6)
+    slot = c.sharedfs["node1"].slot_for("w")
+    assert slot.verify("/sl/x") is False
+    rk = slot.rkey
+    res = c.sharedfs["node1"].scrub_now(exchange=False)
+    assert res["errors"] == 1 and res["repaired"] == 1
+    assert slot.verify("/sl/x") is True
+    assert slot.rkey != rk, "region rewrite must bump the rkey epoch"
+    assert r.get("/sl/x") == val
+
+
+def test_background_scrub_daemon_repairs_then_stops(remote_reader):
+    c, w, r = remote_reader
+    w.put("/bg/x", b"b" * 4096)
+    w.digest()
+    assert c.corrupt_at_rest("node1", "/bg/x", seed=8)
+    sfs1 = c.sharedfs["node1"]
+    sfs1.start_scrub(interval_s=0.001, batch=16)
+    deadline = 200
+    while sfs1.hot.verify("/bg/x") is False and deadline:
+        import time
+        time.sleep(0.005)
+        deadline -= 1
+    sfs1.stop_scrub()
+    assert sfs1.hot.verify("/bg/x") is True
+    assert sfs1.stats["scrub_passes"] >= 1
+
+
+def test_integrity_stats_aggregates(remote_reader):
+    c, w, r = remote_reader
+    w.put("/st/x", b"q" * 4096)
+    w.digest()
+    c.inject_faults([Fault("corrupt", op="read", count=1)])
+    r.get("/st/x")
+    c.clear_faults()
+    st = c.integrity_stats()
+    assert st["corrupt_extents"] == 1
+    assert set(st) >= {"verified_reads", "repairs", "scrub_repairs",
+                       "quarantined_segments", "checksum_exchanges"}

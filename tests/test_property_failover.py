@@ -18,7 +18,14 @@ completed sync barrier (fsync/digest) and the crash:
 under a seeded random fault injector (drops, duplicate deliveries,
 delays, stale one-sided handles — no node loss) across several seeds;
 with bounded retries and idempotent appends the cluster must match the
-model *exactly*, at every step and at the end.
+model *exactly*, at every step and at the end. Two bit-rot ops join
+the mix (PR 8): ``rot`` flips one bit of a random digested needle on a
+random node mid-stream, and ``crashrot`` does it while the writer
+process is down (between crash and recover) — in both cases a scrub
+pass must repair from an intact replica so the model still matches:
+corruption may *exclude* an extent (when no intact replica exists),
+but it must never surface rotten bytes and never resurrect a deleted
+path.
 
 Both properties are driven two ways: through hypothesis when it is
 installed (minimizing counterexamples), and through an always-on
@@ -35,7 +42,7 @@ try:
 except ImportError:  # property logic still runs via the seeded fallback
     HAVE_HYPOTHESIS = False
 
-from repro.core import AssiseCluster, Fault
+from repro.core import AssiseCluster, BitRot, Fault
 from repro.core.transport import NodeDown
 
 _ALL_PATHS = ["/a", "/b", "/c/d"]
@@ -160,10 +167,22 @@ def _run_adversary_case(root, ops, seed):
     c.inject_faults(seed=seed, p_drop=0.06, p_dup=0.06, p_delay=0.02,
                     p_stale=0.06)
     model = {}
+    rot = BitRot(seed=seed * 77 + 5)
 
     def expect(p):
         want = model.get(p)
         return bytes(want) if want is not None else None
+
+    def rot_strike():
+        """Flip one bit of a random digested needle on a random node,
+        then scrub: every replica self-checks and repairs from an
+        intact peer, so the rot is invisible to the model asserts."""
+        nid = rot.rng.choice(c.node_ids)
+        sfs = c.sharedfs[nid]
+        victims = [p for p in _ALL_PATHS if sfs.hot.contains(p)]
+        if victims and rot.flip_in_store(sfs.hot,
+                                         rot.rng.choice(victims)):
+            c.scrub_all(exchange=True)
 
     try:
         for kind, a, b in ops:
@@ -184,6 +203,17 @@ def _run_adversary_case(root, ops, seed):
             elif kind == "crash":
                 ls.log.persist()
                 c.kill_process(ls)
+                ls = c.recover_process_local("p", "node0")
+            elif kind == "rot":
+                rot_strike()
+            elif kind == "crashrot":
+                # bit-rot strikes while the writer process is down:
+                # corrupt between crash and recover, scrub, then the
+                # recovered process must still see the exact model
+                # (local reads trust the scrubbed areas)
+                ls.log.persist()
+                c.kill_process(ls)
+                rot_strike()
                 ls = c.recover_process_local("p", "node0")
             elif kind == "rget":
                 assert reader.get(a) == expect(a), (seed, "rget", a)
@@ -208,7 +238,7 @@ def _run_adversary_case(root, ops, seed):
 
 _CRASH_KINDS = ["put", "put", "write", "delete", "rename", "fsync",
                 "digest", "seal", "crash", "rget", "rget"]
-_ADV_KINDS = _CRASH_KINDS + ["mget", "evict"]
+_ADV_KINDS = _CRASH_KINDS + ["mget", "evict", "rot", "crashrot"]
 
 
 def _gen_ops(rng, kinds, n):
@@ -304,6 +334,8 @@ if HAVE_HYPOTHESIS:
         st.tuples(st.just("rget"), _paths, st.none()),
         st.tuples(st.just("mget"), st.none(), st.none()),
         st.tuples(st.just("evict"), st.none(), st.none()),
+        st.tuples(st.just("rot"), st.none(), st.none()),
+        st.tuples(st.just("crashrot"), st.none(), st.none()),
     )
 
     @settings(max_examples=25, deadline=None)

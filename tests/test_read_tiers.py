@@ -95,13 +95,14 @@ def test_segstore_locate_and_phys_read(tmp_path):
     s = SegmentStore(str(tmp_path / "seg"))
     val = bytes(range(256))
     s.put("/x", val)
-    kind, addr, n, total, rkey = s.locate("/x")
+    kind, addr, n, total, rkey, vsum = s.locate("/x")
     assert (kind, n, total, rkey) == ("loc", 256, 256, s.rkey)
+    assert vsum is not None  # verified one-sided reads (DESIGN §5.3)
     assert s.read(addr, n) == val
-    kind, addr, n, total, _ = s.locate("/x", 10, 20)
+    kind, addr, n, total, _, _ = s.locate("/x", 10, 20)
     assert (kind, n, total) == ("loc", 20, 256)
     assert s.read(addr, n) == val[10:30]
-    kind, _, n, total, _ = s.locate("/x", 250, 20)  # clamped at EOF
+    kind, _, n, total, _, _ = s.locate("/x", 250, 20)  # clamped at EOF
     assert (kind, n, total) == ("loc", 6, 256)
     assert s.locate("/x", 300, 4)[:4] == ("loc", 0, 0, 256)  # past EOF
     assert s.locate("/nope") is None
@@ -112,10 +113,10 @@ def test_segstore_locate_patch_chain(tmp_path):
     s = SegmentStore(str(tmp_path / "seg"))
     s.put("/x", bytes(100))
     s.patch("/x", 20, b"\xff" * 10)
-    kind, addr, n, total, _ = s.locate("/x", 22, 4)  # inside the patch
+    kind, addr, n, total, _, _ = s.locate("/x", 22, 4)  # inside the patch
     assert (kind, n, total) == ("loc", 4, 100)
     assert s.read(addr, n) == b"\xff" * 4
-    kind, addr, n, total, _ = s.locate("/x", 40, 10)  # wholly in base
+    kind, addr, n, total, _, _ = s.locate("/x", 40, 10)  # wholly in base
     assert kind == "loc" and s.read(addr, n) == bytes(10)
     assert s.locate("/x", 15, 10)[0] == "frag"  # straddles the patch
     s.close()
