@@ -18,7 +18,9 @@ ROWS = []
 def row(name: str, us_per_call: float, derived: str = "", *,
         p50: float = None, p99: float = None, p999: float = None,
         wire_bytes: float = None, ops_per_s: float = None,
-        corruptions_detected: int = None, repairs: int = None):
+        corruptions_detected: int = None, repairs: int = None,
+        unavailability_ms: float = None, acked_lost: int = None,
+        diverged: int = None):
     """Record one benchmark row. Percentile columns are optional: tail-
     latency rows (fig13.*) carry p50/p99/p999 alongside the mean so the
     perf-trajectory guard (benchmarks/compare.py) can diff tails too.
@@ -49,6 +51,20 @@ def row(name: str, us_per_call: float, derived: str = "", *,
     if repairs is not None:
         r["repairs"] = repairs
         tail += f",repairs={repairs}"
+    if unavailability_ms is not None:
+        # fig19.*: total simulated time (cluster-clock ms) the writer
+        # was blocked across all disruption windows — deterministic for
+        # a fixed schedule, so compare.py gates it with a hard ceiling
+        r["unavailability_ms"] = unavailability_ms
+        tail += f",unavail_ms={unavailability_ms:.0f}"
+    if acked_lost is not None:
+        # history-checker verdicts (fig19.*): any nonzero value is a
+        # correctness REGRESSION, gated unconditionally by compare.py
+        r["acked_lost"] = acked_lost
+        tail += f",acked_lost={acked_lost}"
+    if diverged is not None:
+        r["diverged"] = diverged
+        tail += f",diverged={diverged}"
     ROWS.append(r)
     print(f"{name},{us_per_call:.2f},{derived}{tail}", flush=True)
 

@@ -45,7 +45,7 @@ def main() -> int:
                          "in the repo root")
     ap.add_argument("--prefixes",
                     default="fig10.,table1.,fig12.,fig13.,fig14.,fig15.,"
-                            "fig17.,fig18.",
+                            "fig17.,fig18.,fig19.",
                     help="comma-separated row-name prefixes to guard")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/old us_per_call exceeds this")
@@ -58,11 +58,16 @@ def main() -> int:
     ap.add_argument("--tail-max-ratio", type=float, default=4.0,
                     help="fail when new/old p99 or p999 exceeds this "
                          "(tail percentiles are noisier than means)")
-    ap.add_argument("--writer-scaling-min", type=float, default=3.0,
+    ap.add_argument("--writer-scaling-min", type=float, default=2.5,
                     help="writer-scaling gate (fig17): fail when the "
                          "NEW dump's 8-writer 4KB-put aggregate "
                          "ops_per_s is below this multiple of its "
-                         "1-writer number, when the 8-writer aggregate "
+                         "1-writer number (floor leaves headroom for "
+                         "machine-day thread-scaling variance — "
+                         "observed 2.75-3.1x on identical code — while "
+                         "still catching a collapse toward the ~1x "
+                         "pre-group-commit behavior), when the 8-writer "
+                         "aggregate "
                          "regressed more than 2x vs the OLD dump, or "
                          "when the group path's 1-writer p50 exceeds "
                          "1.2x the pre-group (group_commit=False) p50. "
@@ -75,6 +80,18 @@ def main() -> int:
                          "p99 — the checksum check must stay off the "
                          "critical path's tail. Pass 0 to disable. "
                          "Skipped when the NEW dump has no fig18 rows.")
+    ap.add_argument("--unavailability-max", type=float, default=2000.0,
+                    help="partition-tolerance gate (fig19, within-file): "
+                         "fail when any fig19 row's unavailability_ms "
+                         "exceeds this ceiling — the column is SIMULATED "
+                         "cluster-clock time for a fixed disruption "
+                         "schedule, so it is deterministic and a hard "
+                         "bound is safe across machines. Pass 0 to "
+                         "disable. Skipped when the NEW dump has no "
+                         "fig19 rows. (acked_lost/diverged > 0 in any "
+                         "fig19 row is ALWAYS a failure — zero acked-"
+                         "write loss and zero post-heal divergence are "
+                         "correctness, not performance.)")
     ap.add_argument("--wire-bytes-max-ratio", type=float, default=1.5,
                     help="fail when new/old wire_bytes exceeds this — "
                          "wire bytes are deterministic transport "
@@ -176,6 +193,22 @@ def main() -> int:
               f"{args.verify_overhead_max_ratio}x){flag}")
         if flag:
             regressed.append("fig18.verify_overhead")
+
+    # -- fig19 partition-tolerance gates (within-file) ---------------------
+    fig19 = {n: r for n, r in new.items() if n.startswith("fig19.")}
+    for name, r in sorted(fig19.items()):
+        # correctness verdicts from the history checker: unconditional
+        for col in ("acked_lost", "diverged"):
+            if col in r and int(r[col]) > 0:
+                print(f"  {name}[{col}]: {r[col]} REGRESSION")
+                regressed.append(f"{name}[{col}]")
+        if args.unavailability_max > 0 and "unavailability_ms" in r:
+            un = float(r["unavailability_ms"])
+            flag = (" REGRESSION" if un > args.unavailability_max else "")
+            print(f"  {name}[unavailability_ms]: {un:.0f}ms simulated "
+                  f"(max {args.unavailability_max:.0f}ms){flag}")
+            if flag:
+                regressed.append(f"{name}[unavailability_ms]")
 
     print(f"compare: {compared} rows compared, {missing} missing, "
           f"{len(regressed)} regressed")

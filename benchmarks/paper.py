@@ -1359,9 +1359,202 @@ def bench_integrity():
         wire_bytes=(d.transport.stats.bytes_sent - b0) / n)
 
 
+# -- Fig 19: partition tolerance — epoch fencing + re-replication -------------
+
+
+def bench_partition_churn():
+    """fig19: availability and integrity under rolling network
+    partitions, double kills, heals, and rejoins — the jepsen-lite
+    history check for the epoch-fenced membership machinery (§5.4).
+
+    A 5-node replication-3 cluster runs on a simulated cluster clock
+    (10ms per op, 200ms heartbeat suspicion). A deterministic per-seed
+    schedule cuts one node at a time off the majority (including the
+    writer's own node), kills up to one node concurrently with a
+    partition, heals, and rejoins. The writer retries each blocked op
+    after a detection sweep; a fenced or suspected incarnation fails
+    over to a majority-side replica. Every write gets a unique value
+    and its ack verdict is recorded in a history.
+
+    Checked in-bench (hard asserts, also exported as gated columns):
+    - **acked_lost == 0**: for every key, the final value is the last
+      acked write or a later (ambiguous, never-acked) one — an acked
+      write is never rolled back by partition, kill, failover, or heal;
+    - **diverged == 0**: after the final heal + re-replication settle +
+      digest, every chain replica's value CRCs agree with the writer's;
+    - replication factor restored by background recruitment, slot
+      watermarks covering the final acked write on every member.
+
+    The unavailability column is *simulated* milliseconds the writer
+    spent blocked (detection sweeps + failover), deterministic for the
+    fixed schedule — compare.py gates it with ``--unavailability-max``.
+    The disaggregated baseline pays a cold restart (cache void + full
+    working-set refetch) per disruption instead."""
+    import random
+    import time as T
+    from repro.core import (PartitionSchedule, PartitionSpec,
+                            WriterFenced)
+    from repro.core.transport import NodeDown, RpcTimeout
+
+    N_OPS = 600
+    TICK = 0.01          # simulated seconds per op slot
+    HB = 0.2             # heartbeat suspicion timeout (simulated)
+    KEYS = 24
+
+    def run_seed(seed):
+        rng = random.Random(seed)
+        clk = [0.0]
+        c = AssiseCluster(tmpdir(f"pc{seed}"), n_nodes=5, replication=3,
+                          clock=lambda: clk[0], auto_rereplicate=True,
+                          repl_deadline_s=0.1)
+        nodes = c.node_ids
+        # rolling minority cuts: one victim at a time, 0.8s windows
+        specs, t = [], 0.5
+        for _ in range(4):
+            victim = nodes[rng.randrange(len(nodes))]
+            others = [n for n in nodes if n != victim] + ["cm"]
+            specs.append(PartitionSpec(a=(victim,), b=tuple(others),
+                                       start=t, heal=t + 0.8))
+            t += 1.5
+        sched = PartitionSchedule(c.transport, specs)
+        kills = {150: "node1", 330: "node3"}
+        restarts = {260: "node1", 470: "node3"}
+        ls = c.open_process("p", "node0")
+        history = []      # (op index, key, value, acked?)
+        unavail_s = 0.0
+        disruptions = 0
+
+        def sweep(cur):
+            """One detection sweep after a blocked op: advance the
+            cluster clock past suspicion, run the heartbeat round and
+            membership repair, then fail the writer over if its
+            incarnation is fenced, dead, or suspected."""
+            clk[0] += HB + 0.05
+            sched.tick(clk[0])
+            c.heartbeat_all()
+            c.cm.check_heartbeats(timeout=HB)
+            c.detect_failures_now()
+            c.rereplication_settle()
+            home = cur.sfs.node_id
+            if (cur._fenced is not None or home in c.dead_nodes
+                    or not c.cm.nodes[home].alive):
+                return c.failover_process("p")
+            return cur
+
+        t_wall0 = T.perf_counter()
+        for i in range(N_OPS):
+            clk[0] += TICK
+            sched.tick(clk[0])
+            if i in kills and kills[i] not in c.dead_nodes:
+                c.kill_node(kills[i])
+                disruptions += 1
+            if i in restarts and restarts[i] in c.dead_nodes:
+                c.restart_node(restarts[i])
+            key = f"/pc/k{i % KEYS}"
+            val = f"{seed}:{i}".encode()
+            acked = False
+            for attempt in range(3):
+                try:
+                    ls.put(key, val)
+                    ls.fsync()
+                    acked = True
+                    break
+                except (RpcTimeout, NodeDown, WriterFenced):
+                    if attempt == 0:
+                        disruptions += 1
+                    t0 = clk[0]
+                    ls = sweep(ls)
+                    unavail_s += clk[0] - t0
+            history.append((i, key, val, acked))
+        wall = T.perf_counter() - t_wall0
+
+        # final heal + rejoin + convergence before checking
+        c.heal_partition()
+        for n in sorted(c.dead_nodes):
+            c.restart_node(n)
+        ls = sweep(ls)
+        for attempt in range(3):
+            try:
+                ls.digest()
+                break
+            except (RpcTimeout, NodeDown, WriterFenced):
+                ls = sweep(ls)
+        c.rereplication_settle()
+
+        # history check 1: zero acked-write loss. The final value of
+        # every key must be its last acked write, or a *later* write
+        # that never acked (ambiguous: replicated but the ack was cut)
+        acked_lost = 0
+        for k in {h[1] for h in history}:
+            writes = [h for h in history if h[1] == k]
+            acked_w = [h for h in writes if h[3]]
+            if not acked_w:
+                continue
+            last = acked_w[-1]
+            allowed = {h[2] for h in writes if h[0] >= last[0]}
+            if ls.get(k) not in allowed:
+                acked_lost += 1
+        # history check 2: zero post-heal divergence across the chain
+        diverged = 0
+        home = ls.sfs.node_id
+        paths = sorted({h[1] for h in history})
+        want = c.sharedfs[home].checksum_exchange(paths)
+        chain = list(c.cm.subtree_chains["/"])
+        for n in chain:
+            if n == home or n in c.dead_nodes:
+                continue
+            if c.sharedfs[n].checksum_exchange(paths) != want:
+                diverged += 1
+        # replication factor restored, watermarks covering the tail
+        assert len(chain) == 3, chain
+        ls.put("/pc/final", b"f")
+        ls.fsync()
+        tail_seq = ls.chain.replicated_seqno
+        for n in chain:
+            if n != home:
+                assert c.sharedfs[n].slot_acked("p") >= tail_seq, n
+        assert acked_lost == 0, f"seed {seed}: lost acked writes"
+        assert diverged == 0, f"seed {seed}: replicas diverged after heal"
+        n_acked = sum(1 for h in history if h[3])
+        c.destroy()
+        return (wall, n_acked, unavail_s, disruptions, acked_lost,
+                diverged)
+
+    for seed in (1, 2, 3):
+        wall, n_acked, unavail_s, disruptions, lost, div = run_seed(seed)
+        row(f"fig19.partition_churn_s{seed}", wall / N_OPS * 1e6,
+            f"{disruptions} disruptions, {n_acked}/{N_OPS} acked, "
+            f"factor restored",
+            ops_per_s=N_OPS / wall,
+            unavailability_ms=unavail_s * 1e3,
+            acked_lost=lost, diverged=div)
+
+    # -- disagg baseline: a disruption voids the cache entirely ---------
+    d = DisaggregatedCluster(tmpdir("pcd"), n_servers=2)
+    dc = d.open_client("p")
+    vals = {f"/pc/k{j}": f"d:{j}".encode() * 64 for j in range(KEYS)}
+    for k, v in vals.items():
+        dc.put(k, v)
+    dc.fsync()
+    for k in vals:
+        dc.get(k)
+    n_disrupt = 6     # matches the per-seed schedule above
+    b0 = d.transport.stats.bytes_sent
+    t0 = T.perf_counter()
+    for _ in range(n_disrupt):
+        dc.crash()    # no epochs, no resync: cold restart per event
+        for k, v in vals.items():
+            assert dc.get(k) == v
+    dt = T.perf_counter() - t0
+    row("fig19.disagg_cold_restart", dt / n_disrupt * 1e6,
+        f"cache void + {KEYS}-key working-set refetch per disruption",
+        wire_bytes=(d.transport.stats.bytes_sent - b0) / n_disrupt)
+
+
 ALL = [bench_tiers, bench_write_latency, bench_read_latency,
        bench_throughput, bench_kv, bench_reserve, bench_profiles,
        bench_sort, bench_failover, bench_sharded_ops, bench_maildelivery,
        bench_segstore, bench_logsize, bench_range_append,
        bench_latency_tail, bench_read_tiers, bench_failover_scale,
-       bench_failover_churn, bench_writer_scaling, bench_integrity]
+       bench_failover_churn, bench_writer_scaling, bench_integrity,
+       bench_partition_churn]

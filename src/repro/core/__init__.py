@@ -9,7 +9,8 @@ Public surface:
 """
 from repro.core.cluster import ClusterManager
 from repro.core.extents import ExtentOverlay, splice
-from repro.core.faults import BitRot, Fault, FaultInjector
+from repro.core.faults import (BitRot, Fault, FaultInjector, PartitionSchedule,
+                               PartitionSpec)
 from repro.core.groupcommit import JournalCorruption
 from repro.core.harness import AssiseCluster
 from repro.core.integrity import CorruptExtent
@@ -17,15 +18,17 @@ from repro.core.log import (Entry, UpdateLog, OP_DELETE, OP_PUT, OP_RENAME,
                             OP_WRITE, decode_stream)
 from repro.core.segstore import FileArea, SegmentStore
 from repro.core.sharedfs import SharedFS
-from repro.core.store import LibState, recover_process
+from repro.core.store import LibState, WriterFenced, recover_process
 from repro.core.transport import (Transport, NodeDown, RpcTimeout,
-                                  StaleHandle, with_retries)
+                                  StaleEpoch, StaleHandle, with_retries)
 
 __all__ = ["AssiseCluster", "BitRot", "ClusterManager", "CorruptExtent",
            "Entry", "ExtentOverlay",
            "Fault", "FaultInjector", "FileArea", "JournalCorruption",
-           "LibState", "NodeDown",
-           "RpcTimeout", "SegmentStore", "SharedFS", "StaleHandle",
-           "Transport", "UpdateLog", "OP_PUT", "OP_DELETE", "OP_RENAME",
+           "LibState", "NodeDown", "PartitionSchedule", "PartitionSpec",
+           "RpcTimeout", "SegmentStore", "SharedFS", "StaleEpoch",
+           "StaleHandle",
+           "Transport", "UpdateLog", "WriterFenced",
+           "OP_PUT", "OP_DELETE", "OP_RENAME",
            "OP_WRITE", "decode_stream", "recover_process", "splice",
            "with_retries"]

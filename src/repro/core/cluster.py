@@ -39,6 +39,10 @@ class ClusterManager:
         # nodes whose failure has already been handled this life: a dead
         # node reported by two watchers must not bump the epoch twice
         self._failed_handled: set = set()
+        # proc_id -> epoch at which a successor was promoted for it: an
+        # old writer incarnation that outlives a partition uses this to
+        # fail-stop instead of dueling its own successor (§3.5 fencing)
+        self.promotions: Dict[str, int] = {}
         # union of dirty sets for all *closed* epochs >= the cached key
         # (only the current epoch's set still grows — see dirty_since)
         self._dirty_suffix_cache: Dict[int, set] = {}
@@ -69,6 +73,8 @@ class ClusterManager:
                 elif rec["t"] == "epoch":
                     self.epoch = rec["epoch"]
                     self.epoch_dirty.setdefault(self.epoch, set())
+                elif rec["t"] == "promo":
+                    self.promotions[rec["proc"]] = rec["epoch"]
                 elif rec["t"] == "mgr":
                     if rec["node"] is None:
                         self.managers.pop(rec["subtree"], None)
@@ -89,26 +95,44 @@ class ClusterManager:
         """cb(event:str, payload) on membership/epoch changes."""
         self._watchers.append(cb)
 
+    def unwatch(self, cb) -> None:
+        try:
+            self._watchers.remove(cb)
+        except ValueError:
+            pass
+
     def _notify(self, event: str, payload) -> None:
         for cb in self._watchers:
             cb(event, payload)
 
-    def heartbeat(self, node_id: str) -> None:
+    def heartbeat(self, node_id: str) -> int:
+        """Record a heartbeat; the ack carries the current view epoch,
+        so a node whose link to the manager works learns of membership
+        changes within one heartbeat interval."""
         info = self.nodes.get(node_id)
         if info:
             info.last_heartbeat = self.clock()
+        return self.epoch
 
-    def check_failures(self,
-                       timeout: float = HEARTBEAT_TIMEOUT) -> List[str]:
+    def check_heartbeats(self,
+                         timeout: float = HEARTBEAT_TIMEOUT) -> List[str]:
+        """One suspicion sweep on the cluster clock: every node whose
+        last heartbeat is older than ``timeout`` is declared failed, and
+        the whole batch is handled as ONE membership change (one epoch
+        bump) — two nodes lost to the same partition must not cost two
+        rounds of invalidation."""
         now = self.clock()
         failed = []
         for info in self.nodes.values():
             if info.alive and now - info.last_heartbeat > timeout:
                 info.alive = False
                 failed.append(info.node_id)
-        for nid in failed:
-            self.on_node_failed(nid)
+        if failed:
+            self.on_nodes_failed(failed)
         return failed
+
+    # historical name used throughout tests/benches
+    check_failures = check_heartbeats
 
     def alive_nodes(self) -> List[str]:
         return [n for n, i in self.nodes.items() if i.alive]
@@ -166,36 +190,88 @@ class ClusterManager:
                                        self.subtree_chains.get("/", []))
 
     def on_node_failed(self, node_id: str) -> None:
-        """Epoch bump + chain repair: promote a reserve replica (§3.5).
-        Idempotent per failure: a dead node reported by several watchers
-        (or a detection tick racing an explicit report) handles the
-        failure exactly once — no double epoch bump, no double repair.
-        The handled mark clears when the node rejoins, so a later
-        genuine re-failure is processed again."""
-        if node_id in self._failed_handled:
+        """Single-failure entry point; see ``on_nodes_failed``."""
+        self.on_nodes_failed([node_id])
+
+    def on_nodes_failed(self, node_ids: List[str]) -> None:
+        """Epoch bump + chain repair for a *batch* of deaths reported in
+        one sweep: ONE epoch bump covers them all (two nodes lost to the
+        same partition must not trigger two rounds of cluster-wide
+        invalidation), then every affected chain sheds all its dead
+        members and promotes warm reserves (§3.5), one per vacancy,
+        bounded by the pool. Idempotent per node: a death reported by
+        several watchers (or a detection tick racing an explicit report)
+        is handled exactly once — the handled mark clears on rejoin so a
+        later genuine re-failure is processed again."""
+        fresh = [n for n in node_ids if n not in self._failed_handled]
+        if not fresh:
             return
-        self._failed_handled.add(node_id)
-        info = self.nodes.get(node_id)
-        if info:
-            info.alive = False
+        dead = set(fresh)
+        for nid in fresh:
+            self._failed_handled.add(nid)
+            info = self.nodes.get(nid)
+            if info:
+                info.alive = False
         self.bump_epoch()
         for st, chain in self.subtree_chains.items():
-            if node_id in chain:
-                chain.remove(node_id)
-                pool = self.reserves.get(st, [])
-                if pool:
-                    promoted = pool.pop(0)
-                    chain.append(promoted)
-                    self._notify("promote", (st, promoted))
-                self._journal({"t": "chain", "subtree": st, "chain": chain,
-                               "reserve": pool})
-        # lease management held by the dead node expires immediately
+            lost = [n for n in chain if n in dead]
+            if not lost:
+                continue
+            for nid in lost:
+                chain.remove(nid)
+            pool = self.reserves.get(st, [])
+            # a dead reserve must never be promoted later
+            pool[:] = [n for n in pool if n not in dead]
+            for _ in lost:
+                if not pool:
+                    break
+                promoted = pool.pop(0)
+                chain.append(promoted)
+                self._notify("promote", (st, promoted))
+            self._journal({"t": "chain", "subtree": st, "chain": chain,
+                           "reserve": pool})
+        # lease management held by dead nodes expires immediately
         for st, (mgr, _) in list(self.managers.items()):
-            if mgr == node_id:
+            if mgr in dead:
                 del self.managers[st]
                 self._journal({"t": "mgr", "subtree": st, "node": None,
                                "at": self.clock()})
-        self._notify("failed", node_id)
+        for nid in fresh:
+            self._notify("failed", nid)
+
+    def recruit(self, subtree: str, target: int) -> Optional[str]:
+        """Pick a replacement replica for an under-replicated chain and
+        append it (at a bumped epoch, so every writer refreshes its
+        chain view). Returns the recruited node id, or None when the
+        chain is already at ``target``, no candidate exists, or the
+        chain is *empty* — a recruiter must never conjure a chain out of
+        zero survivors, because an empty-state successor accepting
+        writes is exactly the split-brain that loses acked data. The
+        caller is responsible for catching the recruit up (delta resync)
+        before counting it toward durability."""
+        chain = self.subtree_chains.get(subtree)
+        if not chain or len(chain) >= target:
+            return None
+        taken = set(chain) | set(self.reserves.get(subtree, []))
+        cand = [n for n, i in self.nodes.items()
+                if i.alive and n not in taken]
+        if not cand:
+            return None
+        recruit = cand[0]
+        chain.append(recruit)
+        self._journal({"t": "chain", "subtree": subtree, "chain": chain,
+                       "reserve": self.reserves.get(subtree, [])})
+        self.bump_epoch()
+        self._notify("recruit", (subtree, recruit))
+        return recruit
+
+    def record_promotion(self, proc_id: str) -> None:
+        """Journal that a successor was promoted for ``proc_id`` at the
+        current epoch. An old incarnation of the same process that later
+        observes this epoch (e.g. after a partition heals) must fence
+        itself instead of resuming writes beside its successor."""
+        self.promotions[proc_id] = self.epoch
+        self._journal({"t": "promo", "proc": proc_id, "epoch": self.epoch})
 
     def on_node_recovered(self, node_id: str) -> None:
         info = self.nodes.get(node_id)

@@ -186,6 +186,54 @@ class FaultInjector:
         return False
 
 
+@dataclass
+class PartitionSpec:
+    """One partition event in a schedule: at ``start`` (inclusive, in
+    whatever tick unit the driver uses — op index or clock seconds)
+    block links between node sets ``a`` and ``b`` in ``mode``
+    (``both`` / ``a_to_b`` / ``b_to_a`` — see ``Transport.partition``);
+    at ``heal`` (if not None) unblock exactly those pairs again."""
+
+    a: tuple
+    b: tuple
+    mode: str = "both"
+    start: float = 0.0
+    heal: Optional[float] = None
+
+
+class PartitionSchedule:
+    """Deterministic partition driver: ``tick(now)`` applies every
+    start/heal whose time has come, in schedule order, and returns
+    human-readable event strings for logging/assertions. Idempotent per
+    event — re-ticking the same ``now`` does nothing new."""
+
+    def __init__(self, transport, events: List[PartitionSpec]):
+        self.transport = transport
+        self.events = list(events)
+        self._started: set = set()
+        self._healed: set = set()
+
+    def tick(self, now: float) -> List[str]:
+        fired = []
+        for i, ev in enumerate(self.events):
+            if i not in self._started and now >= ev.start:
+                self._started.add(i)
+                self.transport.partition(ev.a, ev.b, mode=ev.mode)
+                fired.append(f"partition {ev.a}~{ev.b} ({ev.mode})")
+            if i in self._started and i not in self._healed \
+                    and ev.heal is not None and now >= ev.heal:
+                self._healed.add(i)
+                self.transport.heal(ev.a, ev.b)
+                fired.append(f"heal {ev.a}~{ev.b}")
+        return fired
+
+    def done(self) -> bool:
+        """All events started and (where a heal is scheduled) healed."""
+        return all(i in self._started
+                   and (ev.heal is None or i in self._healed)
+                   for i, ev in enumerate(self.events))
+
+
 class BitRot:
     """Seeded **at-rest** corruptor: flips one bit in data that is
     already persisted — segment files, replica-slot region buffers, or

@@ -583,30 +583,38 @@ class GroupCommitCoordinator:
         tr = self.sfs.transport
         wnode = self.sfs.node_id
         region = f"gslot/{wnode}"
-        for nid in chain:
-            if (nid, region) not in self._ensured:
-                with_retries(
-                    lambda n=nid: tr.rpc(n, "ensure_group_sink", wnode),
-                    stats=tr.stats)
-                self._ensured.add((nid, region))
+        with tr.act_as(wnode):
+            for nid in chain:
+                if (nid, region) not in self._ensured:
+                    with_retries(
+                        lambda n=nid: tr.rpc(n, "ensure_group_sink",
+                                             wnode,
+                                             _epoch=self.sfs.view_epoch),
+                        stats=tr.stats)
+                    self._ensured.add((nid, region))
         framed = frame_batch([(p[0].ls.proc_id, p[4]) for p in grp])
         items = [(p[0].ls.proc_id, p[2], p[3]) for p in grp]
         head, rest = chain[0], list(chain[1:])
         pushed = [False]
 
         def _attempt():
+            # epoch read fresh per attempt: a fenced first try followed
+            # by a view refresh must carry the new header on the retry
+            ep = self.sfs.view_epoch
             if not pushed[0]:
                 # push-once: an RPC retry after a dropped ack must not
                 # re-ship the payload bytes (the slots already hold
                 # them; the wire-bytes audit pins this down)
-                tr.one_sided_write(head, region, framed)
+                tr.one_sided_write(head, region, framed, _epoch=ep)
                 pushed[0] = True
             # writer dies between the batch write and the continue RPC:
             # the head holds every member's bytes, no ack happened
             tr.crashpoint("chain.mid", wnode)
-            return tr.rpc(head, "group_continue", wnode, items, rest)
+            return tr.rpc(head, "group_continue", wnode, items, rest,
+                          _epoch=ep)
 
-        acks = with_retries(_attempt, stats=tr.stats)
+        with tr.act_as(wnode):
+            acks = with_retries(_attempt, stats=tr.stats)
         for (r, _c, _s, last, _d), ack in zip(grp, acks):
             assert ack >= last, (ack, last)
             r.ls.chain.mark_acked(last)

@@ -34,10 +34,14 @@ class AssiseCluster:
                  dram_capacity: int = 2 << 30,
                  fsync_data: bool = False, clock=time.monotonic,
                  group_commit: bool = False, group_window_s: float = 0.0,
-                 digest_workers: int = 1, digest_shards: int = 1):
+                 digest_workers: int = 1, digest_shards: int = 1,
+                 min_replicas: int = 1, degraded_writes: bool = True,
+                 auto_rereplicate: bool = False,
+                 repl_deadline_s: Optional[float] = None):
         assert replication + n_reserve <= n_nodes
         self.root = root_dir
         self.mode = mode
+        self.replication = replication
         self.log_capacity = log_capacity
         self.dram_capacity = dram_capacity
         self.fsync_data = fsync_data
@@ -45,10 +49,21 @@ class AssiseCluster:
         self.group_window_s = group_window_s
         self.digest_workers = digest_workers
         self.digest_shards = digest_shards
+        self.min_replicas = min_replicas
+        self.degraded_writes = degraded_writes
+        # restore the replication factor in the background after chain
+        # shrink (recruit + delta resync). Off by default: single-kill
+        # tests expect the shrunken chain to persist.
+        self.auto_rereplicate = auto_rereplicate
+        self.repl_deadline_s = repl_deadline_s
         os.makedirs(root_dir, exist_ok=True)
         self.transport = Transport()
         self.cm = ClusterManager(os.path.join(root_dir, "cm.journal"),
                                  clock=clock)
+        # the manager is reachable only over the transport ("cm"
+        # endpoint): heartbeats and lease delegation share fate with the
+        # data links, so partitions drive real suspicion
+        self.transport.register_endpoint("cm", self.cm)
         self.node_ids = [f"node{i}" for i in range(n_nodes)]
         self.hot_capacity = hot_capacity
         self.sharedfs: Dict[str, SharedFS] = {}
@@ -150,6 +165,12 @@ class AssiseCluster:
                       log_capacity=kw.pop("log_capacity", self.log_capacity),
                       dram_capacity=kw.pop("dram_capacity",
                                            self.dram_capacity),
+                      min_replicas=kw.pop("min_replicas",
+                                          self.min_replicas),
+                      degraded_writes=kw.pop("degraded_writes",
+                                             self.degraded_writes),
+                      repl_deadline_s=kw.pop("repl_deadline_s",
+                                             self.repl_deadline_s),
                       subtree=subtree, fsync_data=self.fsync_data, **kw)
         self.procs[proc_id] = ls
         return ls
@@ -168,11 +189,42 @@ class AssiseCluster:
         self.procs[proc_id] = ls
         return ls
 
+    # -- partitions ---------------------------------------------------------------
+    def partition(self, a, b=None, mode: str = "both") -> None:
+        """Partition node set ``a`` from ``b`` (default: everything
+        else, including the cluster manager — the classic minority
+        cut). See ``Transport.partition`` for asymmetric modes."""
+        a = [a] if isinstance(a, str) else list(a)
+        if b is None:
+            b = [n for n in self.node_ids if n not in a] + ["cm"]
+        self.transport.partition(a, b, mode=mode)
+
+    def heal_partition(self, a=None, b=None) -> None:
+        self.transport.heal(a, b)
+
     # -- node failure / recovery --------------------------------------------------
     def heartbeat_all(self) -> None:
+        """One heartbeat round, over the transport: a node partitioned
+        away from the manager cannot refresh its liveness (suspicion
+        builds), and a *suspected* node whose heartbeat gets through
+        again (partition healed) rejoins — per-epoch invalidation first,
+        exactly like a node restart."""
         for nid in self.node_ids:
-            if nid not in self.dead_nodes:
-                self.cm.heartbeat(nid)
+            if nid in self.dead_nodes:
+                continue
+            sfs = self.sharedfs[nid]
+            try:
+                with self.transport.act_as(nid):
+                    ep = self.transport.rpc("cm", "heartbeat", nid)
+            except Exception:
+                continue  # unreachable: the manager's sweep times it out
+            info = self.cm.nodes.get(nid)
+            if info is not None and not info.alive:
+                # suspected-then-healed: everything dirtied since the
+                # view it last held must be invalidated before it serves
+                sfs.invalidate_since(sfs.view_epoch)
+                self.cm.on_node_recovered(nid)
+            sfs.observe_epoch(ep)
 
     def kill_node(self, node_id: str) -> None:
         """Node dies (power loss): DRAM gone, NVM + SSD files survive.
@@ -188,17 +240,58 @@ class AssiseCluster:
         self.sharedfs[node_id].shutdown(abandon=True)
 
     def detect_failures(self, timeout: float = 1.0) -> List[str]:
-        return self.cm.check_failures(timeout)
+        failed = self.cm.check_failures(timeout)
+        if self.auto_rereplicate:
+            self._rereplicate()
+        return failed
 
     def detect_failures_now(self) -> List[str]:
         """Deterministically time out exactly the injected-dead nodes
-        (test/bench convenience; production uses the 1s heartbeat loop)."""
+        (test/bench convenience; production uses the 1s heartbeat loop).
+        Simultaneous deaths are handled as ONE membership change: one
+        epoch bump covers the whole batch."""
         self.heartbeat_all()
         failed = [n for n in self.node_ids
                   if n in self.dead_nodes and self.cm.nodes[n].alive]
-        for n in failed:
-            self.cm.on_node_failed(n)  # idempotent: handled once per death
+        if failed:
+            self.cm.on_nodes_failed(failed)  # idempotent per death
+        if self.auto_rereplicate:
+            # every sweep, not only failure sweeps: a chain left short
+            # when no candidate was alive refills once nodes rejoin
+            self._rereplicate()
         return failed
+
+    # -- background re-replication ------------------------------------------------
+    def _rereplicate(self) -> List[str]:
+        """Restore the replication factor after membership shrank: for
+        each under-replicated chain, recruit one alive spare, then ship
+        the catch-up (slot suffixes + namespace delta) from a surviving
+        replica on *its digest worker* — off every writer's hot path."""
+        recruited: List[str] = []
+        for st, chain in list(self.cm.subtree_chains.items()):
+            alive = [n for n in chain if n not in self.dead_nodes]
+            if not alive or len(chain) >= self.replication:
+                continue
+            r = self.cm.recruit(st, self.replication)
+            if r is None:
+                continue
+            recruited.append(r)
+            rsfs = self.sharedfs[r]
+            # the recruit may hold arbitrarily stale cached state from a
+            # previous chain life: same rule as a node restart
+            rsfs.invalidate_since(rsfs.recovered_epoch)
+            src = next(n for n in alive if n != r)
+            src_sfs = self.sharedfs[src]
+            src_sfs.submit_digest(
+                lambda s=src_sfs, t=r: s.rereplicate_to(t),
+                key=f"rerepl/{r}")
+        return recruited
+
+    def rereplication_settle(self) -> None:
+        """Block until queued catch-up shipments have drained."""
+        for nid, sfs in self.sharedfs.items():
+            if nid not in self.dead_nodes:
+                sfs.drain_digests()
 
     def failover_process(self, proc_id: str, subtree: str = "/", *,
                          fast: bool = True) -> LibState:
@@ -236,7 +329,7 @@ class AssiseCluster:
                     # retried: a transiently dropped probe would
                     # under-report the watermark and collide seqnos
                     a = with_retries(lambda n=nid: self.transport.rpc(
-                        n, "slot_acked", proc_id))
+                        n, "slot_acked", proc_id), deadline_s=0.5)
                 except Exception:
                     continue
                 if a > acked:
@@ -248,21 +341,33 @@ class AssiseCluster:
                 try:
                     data = with_retries(
                         lambda: self.transport.rpc(
-                            best, "slot_suffix", proc_id, acked_local))
+                            best, "slot_suffix", proc_id, acked_local),
+                        deadline_s=0.5)
                     if data:
                         sfs.slot_for(proc_id).write(None, data)
                 except Exception:
                     pass
             sfs.promote_dead_process(proc_id, peers=survivors)
+            # journal the succession: any fenced-off predecessor
+            # incarnation that later observes this epoch must fail-stop
+            # rather than dual-write (see LibState._check_epoch)
+            self.cm.record_promotion(proc_id)
             ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
                           subtree=subtree, fsync_data=self.fsync_data,
-                          start_seqno=acked, settle_before_digest=True)
+                          start_seqno=acked, settle_before_digest=True,
+                          min_replicas=self.min_replicas,
+                          degraded_writes=self.degraded_writes,
+                          repl_deadline_s=self.repl_deadline_s)
         else:
             sfs.recover_dead_process(proc_id)
+            self.cm.record_promotion(proc_id)
             acked = sfs.slot_acked(proc_id)
             ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
                           subtree=subtree, fsync_data=self.fsync_data,
-                          start_seqno=acked)
+                          start_seqno=acked,
+                          min_replicas=self.min_replicas,
+                          degraded_writes=self.degraded_writes,
+                          repl_deadline_s=self.repl_deadline_s)
         self.procs[proc_id] = ls
         return ls
 

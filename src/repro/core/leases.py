@@ -44,6 +44,11 @@ class Lease:
     mode: str
     holder: str  # process or node id
     expires_at: float
+    # view epoch at grant time: grants stamped before a membership
+    # change are dropped wholesale when the manager's view advances
+    # (clients invalidate their caches on the same bump, so nobody
+    # keeps operating on a grant the new epoch never saw)
+    epoch: int = 0
 
     def valid(self, now: float) -> bool:
         return now < self.expires_at
@@ -163,11 +168,21 @@ class LeaseTable:
             probe = probe.rsplit("/", 1)[0] or "/"
 
     def grant(self, path: str, mode: str, holder: str, now: float,
-              ttl: float = LEASE_TTL) -> Lease:
-        l = Lease(next(_ids), path, mode, holder, now + ttl)
+              ttl: float = LEASE_TTL, epoch: int = 0) -> Lease:
+        l = Lease(next(_ids), path, mode, holder, now + ttl, epoch)
         self.leases[l.id] = l
         self._index(l)
         return l
+
+    def drop_epochs_before(self, epoch: int) -> int:
+        """Drop every grant stamped with an older view epoch. No grace
+        revocation: holders observe the same epoch bump and clear their
+        caches themselves — this is the manager-side half of the same
+        invalidation."""
+        dead = [l for l in self.leases.values() if l.epoch < epoch]
+        for l in dead:
+            self._drop(l)
+        return len(dead)
 
     def release(self, lease_id: int) -> None:
         l = self.leases.get(lease_id)
@@ -197,10 +212,12 @@ class LeaseManager:
         self.transfers = 0  # lease handoffs (logged; paper: replicated)
 
     def acquire(self, holder: str, path: str, mode: str, now: float,
-                ttl: float = LEASE_TTL, subtree: str = "/") -> Lease:
+                ttl: float = LEASE_TTL, subtree: str = "/",
+                epoch: int = 0) -> Lease:
         existing = self.table.find(holder, path, mode, now)
         if existing is not None:
             existing.expires_at = now + ttl  # refresh
+            existing.epoch = max(existing.epoch, epoch)
             return existing
         target = path
         if mode == WRITE and subtree not in ("", "/") \
@@ -219,7 +236,11 @@ class LeaseManager:
             self.revoke_cb(l.holder, l.path)  # grace: flush + handoff
             self.table.release(l.id)
             self.transfers += 1
-        return self.table.grant(target, mode, holder, now, ttl)
+        return self.table.grant(target, mode, holder, now, ttl, epoch)
+
+    def drop_stale(self, epoch: int) -> int:
+        """Membership changed: drop grants from older view epochs."""
+        return self.table.drop_epochs_before(epoch)
 
     def release_all(self, holder: str) -> int:
         return self.table.release_holder(holder)

@@ -22,6 +22,7 @@ lower tiers (see ``SharedFS.read_any``).
 from __future__ import annotations
 
 import bisect
+import contextlib
 import os
 import threading
 from collections import deque
@@ -373,11 +374,18 @@ class ChainClient:
     repaired chain — duplicate delivery is absorbed by slot dedup."""
 
     def __init__(self, proc_id: str, chain: List[str], transport,
-                 owner: Optional[str] = None, window: int = 4):
+                 owner: Optional[str] = None, window: int = 4,
+                 epoch_fn=None, deadline_s: Optional[float] = None):
         self.proc_id = proc_id
         self.chain = list(chain)  # replica node ids, in order (no self)
         self.transport = transport
         self.owner = owner  # writer's node id (crash-point identity)
+        # epoch_fn() -> the writer's current view epoch, read fresh per
+        # attempt so every ship carries an honest header; None = unfenced
+        self.epoch_fn = epoch_fn
+        # total-elapsed retry bound per ship (see with_retries): during
+        # a partition the writer surfaces RpcTimeout within this budget
+        self.deadline_s = deadline_s
         self.replicated_seqno = 0  # chain-acked watermark
         self.submitted_seqno = 0   # handed to the sender (>= acked)
         self.window = window
@@ -472,18 +480,30 @@ class ChainClient:
                 self.replicated_seqno = max(self.replicated_seqno, last)
                 self._cv.notify_all()
 
+    def _sendctx(self):
+        """Sender identity for transport ops: the background sender
+        thread has no inherited identity, so declare the owner's."""
+        if self.owner is None:
+            return contextlib.nullcontext()
+        return self.transport.act_as(self.owner)
+
     def _ship(self, last_seqno: int, data: bytes) -> None:
         head, rest = self.chain[0], self.chain[1:]
         region = f"slot/{self.proc_id}"
 
         def _attempt():
-            self.transport.one_sided_write(head, region, data)
-            if self.owner is not None:
-                self.transport.crashpoint("chain.mid", self.owner)
-            return self.transport.rpc(head, "chain_continue",
-                                      self.proc_id, data, rest)
+            ep = self.epoch_fn() if self.epoch_fn is not None else None
+            with self._sendctx():
+                self.transport.one_sided_write(head, region, data,
+                                               _epoch=ep)
+                if self.owner is not None:
+                    self.transport.crashpoint("chain.mid", self.owner)
+                return self.transport.rpc(head, "chain_continue",
+                                          self.proc_id, data, rest,
+                                          _epoch=ep)
 
-        ack = with_retries(_attempt, stats=self.transport.stats)
+        ack = with_retries(_attempt, stats=self.transport.stats,
+                           deadline_s=self.deadline_s)
         assert ack >= last_seqno, (ack, last_seqno)
 
     # -- synchronous replicate (fsync/dsync path) ----------------------------
@@ -515,15 +535,20 @@ class ChainClient:
         region = f"slot/{self.proc_id}"
 
         def _attempt():
-            self.transport.one_sided_write(head, region, data)
-            if self.owner is not None:
-                # writer dies between the slot write and the continue
-                # RPC: the head holds the bytes, the ack never happened
-                self.transport.crashpoint("chain.mid", self.owner)
-            return self.transport.rpc(head, "chain_continue",
-                                      self.proc_id, data, rest)
+            ep = self.epoch_fn() if self.epoch_fn is not None else None
+            with self._sendctx():
+                self.transport.one_sided_write(head, region, data,
+                                               _epoch=ep)
+                if self.owner is not None:
+                    # writer dies between the slot write and the continue
+                    # RPC: the head holds the bytes, the ack never happened
+                    self.transport.crashpoint("chain.mid", self.owner)
+                return self.transport.rpc(head, "chain_continue",
+                                          self.proc_id, data, rest,
+                                          _epoch=ep)
 
-        return with_retries(_attempt, stats=self.transport.stats)
+        return with_retries(_attempt, stats=self.transport.stats,
+                            deadline_s=self.deadline_s)
 
     def digest_fanout(self, through_seqno: int) -> None:
         """Make every replica digest its slot through ``through_seqno``
@@ -532,8 +557,13 @@ class ChainClient:
         round-trip per replica."""
         if not self.chain:
             return
-        with_retries(
-            lambda: self.transport.rpc(self.chain[0], "digest_slot_chain",
-                                       self.proc_id, through_seqno,
-                                       self.chain[1:]),
-            stats=self.transport.stats)
+
+        def _attempt():
+            ep = self.epoch_fn() if self.epoch_fn is not None else None
+            with self._sendctx():
+                return self.transport.rpc(
+                    self.chain[0], "digest_slot_chain", self.proc_id,
+                    through_seqno, self.chain[1:], _epoch=ep)
+
+        with_retries(_attempt, stats=self.transport.stats,
+                     deadline_s=self.deadline_s)

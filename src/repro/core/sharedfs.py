@@ -19,7 +19,7 @@ import zlib
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import log as L
-from repro.core.cluster import ClusterManager
+from repro.core.cluster import ClusterManager, MANAGER_TTL
 from repro.core.extents import ExtentOverlay
 from repro.core.groupcommit import (GroupCommitCoordinator, GroupSlotSink,
                                     frame_batch)
@@ -69,6 +69,16 @@ class SharedFS:
         self.local_procs: Dict[str, object] = {}  # proc_id -> LibState
         self.permissions: Dict[str, tuple] = {}  # prefix -> (read, write)
         self.recovered_epoch = 0
+        # this node's *view* of the membership epoch: advanced only by
+        # channels that actually reached us (heartbeat acks, epoch
+        # headers on incoming messages, a reachable manager watch) — a
+        # partitioned node's view legitimately goes stale, which is
+        # exactly what epoch fencing catches (DESIGN.md §5.4)
+        self.view_epoch = cluster.epoch
+        # cached lease-manager resolution (subtree -> (node, expires)):
+        # steady state pays zero manager RPCs; the short TTL bounds how
+        # long a partitioned node keeps trusting a stale delegation
+        self._mgr_cache: Dict[str, tuple] = {}
         self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
                       "remote_locates": 0, "invalidated": 0, "bg_jobs": 0,
                       "promotions": 0,
@@ -115,6 +125,52 @@ class SharedFS:
             if group_commit else None)
         self._group_sinks: Dict[str, GroupSlotSink] = {}
         transport.register_endpoint(node_id, self)
+        # the cluster manager is itself a transport endpoint ("cm"):
+        # heartbeats and manager lookups travel the same partitionable
+        # links as data, so suspicion comes from real reachability
+        if not transport.has_endpoint("cm"):
+            transport.register_endpoint("cm", cluster)
+        cluster.watch(self._on_cluster_event)
+
+    # -- view epochs (partition-honest membership, §5.4) ---------------------
+    def _on_cluster_event(self, event: str, payload) -> None:
+        """Manager-side watch push. Only honest channels advance the
+        view: a node that is down, or whose link *from* the manager is
+        partitioned, must not learn of a bump it could never have been
+        told about."""
+        if event != "epoch":
+            return
+        if self.transport.is_down(self.node_id) \
+                or self.transport.link_blocked("cm", self.node_id):
+            return
+        self.observe_epoch(payload)
+
+    def observe_epoch(self, epoch: int) -> int:
+        """Adopt a (possibly newer) membership view. On advance, the
+        lease manager drops grants stamped with older epochs and the
+        manager-resolution cache clears — both halves of the paper's
+        per-epoch invalidation. Returns the current view."""
+        if epoch > self.view_epoch:
+            self.view_epoch = epoch
+            self.lease_mgr.drop_stale(epoch)
+            self._mgr_cache.clear()
+        return self.view_epoch
+
+    def _rpc(self, dst: str, method: str, *args, deadline_s=None,
+             fenced: bool = False, attempts: int = 4):
+        """Peer RPC sent *as this node* (partition checks apply), with
+        bounded retries. ``fenced=True`` stamps each attempt with the
+        *current* view epoch — re-read per try, so a view refresh
+        between retries is reflected."""
+        tr = self.transport
+
+        def _attempt():
+            with tr.act_as(self.node_id):
+                kw = {"_epoch": self.view_epoch} if fenced else {}
+                return tr.rpc(dst, method, *args, **kw)
+
+        return with_retries(_attempt, stats=tr.stats, attempts=attempts,
+                            deadline_s=deadline_s)
 
     # -- permissions (single administrative domain, paper §3.2) -------------
     def set_permission(self, prefix: str, read: bool = True,
@@ -152,19 +208,23 @@ class SharedFS:
 
     def _digest_loop(self, i: int) -> None:
         q = self._digest_qs[i]
-        while True:
-            item = q.get()
-            try:
-                if item is None:
-                    return
-                fn, abort = item
-                if not self._abandon:
-                    fn()
-                    self.stats["bg_jobs"] += 1
-                elif abort is not None:
-                    abort()
-            finally:
-                q.task_done()
+        # worker threads have no inherited sender identity: everything
+        # a digest job sends (chain forwards, base fetches, re-
+        # replication pushes) goes out as this node
+        with self.transport.act_as(self.node_id):
+            while True:
+                item = q.get()
+                try:
+                    if item is None:
+                        return
+                    fn, abort = item
+                    if not self._abandon:
+                        fn()
+                        self.stats["bg_jobs"] += 1
+                    elif abort is not None:
+                        abort()
+                finally:
+                    q.task_done()
 
     def drain_digests(self) -> None:
         """Barrier: block until every queued digest job has completed."""
@@ -176,6 +236,7 @@ class SharedFS:
         queued jobs are skipped instead of run (a dead node must not
         keep digesting), and the join is best-effort."""
         self._abandon = abandon
+        self.cluster.unwatch(self._on_cluster_event)
         self.stop_scrub()
         me = threading.current_thread()
         for i, t in enumerate(self._digest_threads):
@@ -254,9 +315,10 @@ class SharedFS:
             # a middle replica dying right here leaves the prefix acked
             # nowhere: the writer sees NodeDown, the op is not acked
             self.transport.crashpoint("chain.fwd", self.node_id)
-            self.transport.one_sided_write(head, f"slot/{proc_id}", data)
+            self.transport.one_sided_write(head, f"slot/{proc_id}", data,
+                                           _epoch=self.view_epoch)
             return self.transport.rpc(head, "chain_continue", proc_id, data,
-                                      tail)
+                                      tail, _epoch=self.view_epoch)
         return slot.acked_seqno
 
     # -- group commit (cross-process batch replication) ------------------------
@@ -286,9 +348,9 @@ class SharedFS:
                 [(pid, self.slot_for(pid).suffix_bytes(since))
                  for pid, since, _last in items])
             self.transport.one_sided_write(head, f"gslot/{writer_node}",
-                                           framed)
+                                           framed, _epoch=self.view_epoch)
             self.transport.rpc(head, "group_continue", writer_node, items,
-                               tail)
+                               tail, _epoch=self.view_epoch)
         return [self.slot_for(pid).acked_seqno for pid, _s, _l in items]
 
     # -- digest / eviction (paper §A.1) ----------------------------------------
@@ -355,7 +417,8 @@ class SharedFS:
         applied = self.digest_slot(proc_id, through_seqno)
         if rest:
             self.transport.rpc(rest[0], "digest_slot_chain", proc_id,
-                               through_seqno, rest[1:])
+                               through_seqno, rest[1:],
+                               _epoch=self.view_epoch)
         return applied
 
     def digest_entries(self, entries: List[L.Entry]) -> int:
@@ -420,10 +483,7 @@ class SharedFS:
             try:
                 # retried: a transient drop must not demote to the next
                 # peer (whose copy may be staler) or to a fabricated base
-                found, v = with_retries(
-                    lambda n=nid: self.transport.rpc(n, "read_remote",
-                                                     path),
-                    stats=self.transport.stats)
+                found, v = self._rpc(nid, "read_remote", path)
             except Exception:
                 continue
             if found:
@@ -703,10 +763,7 @@ class SharedFS:
                 continue
             seen.add(nid)
             try:
-                found, v = with_retries(
-                    lambda n=nid: self.transport.rpc(n, "read_checked",
-                                                     path),
-                    stats=self.transport.stats)
+                found, v = self._rpc(nid, "read_checked", path)
             except Exception:
                 continue
             if found:
@@ -823,10 +880,7 @@ class SharedFS:
                         peers.append(nid)
             for nid in peers:
                 try:
-                    theirs = with_retries(
-                        lambda n=nid: self.transport.rpc(
-                            n, "checksum_exchange", batch),
-                        stats=self.transport.stats)
+                    theirs = self._rpc(nid, "checksum_exchange", batch)
                 except Exception:
                     continue
                 for p, a, b in zip(batch, mine, theirs):
@@ -836,10 +890,7 @@ class SharedFS:
                     if self._verify_local(p) is not False:
                         # our bytes check out: the peer's rotted
                         try:
-                            with_retries(
-                                lambda n=nid: self.transport.rpc(
-                                    n, "scrub_path", p),
-                                stats=self.transport.stats)
+                            self._rpc(nid, "scrub_path", p)
                         except Exception:
                             pass
         self.stats["scrub_passes"] += 1
@@ -863,13 +914,14 @@ class SharedFS:
         self._scrub_stop = stop
 
         def _loop():
-            while not stop.wait(interval_s):
-                if self._abandon:
-                    return
-                try:
-                    self.scrub_now(max_paths=batch, exchange=exchange)
-                except Exception:
-                    pass  # a dying peer mid-pass: next pass retries
+            with self.transport.act_as(self.node_id):
+                while not stop.wait(interval_s):
+                    if self._abandon:
+                        return
+                    try:
+                        self.scrub_now(max_paths=batch, exchange=exchange)
+                    except Exception:
+                        pass  # a dying peer mid-pass: next pass retries
 
         t = threading.Thread(target=_loop,
                              name=f"scrub-{self.node_id}", daemon=True)
@@ -886,6 +938,23 @@ class SharedFS:
         self._scrub_thread = None
 
     # -- leases -------------------------------------------------------------------
+    def _resolve_manager(self, subtree: str) -> str:
+        """Which node manages leases for ``subtree`` — resolved through
+        the transported "cm" endpoint (the delegation root), cached for
+        half the delegation TTL. A node partitioned away from the
+        manager cannot resolve (RpcTimeout after a short deadline) once
+        its cache expires: its processes fail-stop on lease renewal
+        instead of granting themselves leases the majority side is
+        already reassigning (§5.4 minority fail-stop)."""
+        now = self.cluster.clock()
+        hit = self._mgr_cache.get(subtree)
+        if hit is not None and now < hit[1]:
+            return hit[0]
+        mgr = self._rpc("cm", "manager_for", subtree, self.node_id,
+                        deadline_s=0.25, fenced=True)
+        self._mgr_cache[subtree] = (mgr, now + MANAGER_TTL / 2)
+        return mgr
+
     def lease_acquire(self, holder: str, path: str, mode: str,
                       subtree: str = "/") -> Tuple[str, str, float]:
         """Acquire (or refresh) a lease; returns ``(lease_path, mode,
@@ -893,24 +962,25 @@ class SharedFS:
         manager entirely until it expires or is revoked (paper §3.3)."""
         if not self.check_permission(path, mode):
             raise PermissionError(f"{holder}: {mode} {path}")
-        mgr_node = self.cluster.manager_for(subtree, self.node_id)
+        mgr_node = self._resolve_manager(subtree)
         now = self.cluster.clock()
         if mgr_node == self.node_id:
             lease = self.lease_mgr.acquire(holder, path, mode, now,
-                                           subtree=subtree)
+                                           subtree=subtree,
+                                           epoch=self.view_epoch)
             return (lease.path, lease.mode, lease.expires_at)
         # idempotent at the manager (a re-acquire refreshes the grant),
-        # so a dropped grant RPC is safely retried
-        return with_retries(
-            lambda: self.transport.rpc(mgr_node, "lease_acquire_local",
-                                       holder, path, mode, subtree),
-            stats=self.transport.stats)
+        # so a dropped grant RPC is safely retried; the epoch header
+        # fences a stale-view requester before any grant is made
+        return self._rpc(mgr_node, "lease_acquire_local", holder, path,
+                         mode, subtree, fenced=True, deadline_s=0.25)
 
     def lease_acquire_local(self, holder: str, path: str, mode: str,
                             subtree: str = "/") -> Tuple[str, str, float]:
         lease = self.lease_mgr.acquire(holder, path, mode,
                                        self.cluster.clock(),
-                                       subtree=subtree)
+                                       subtree=subtree,
+                                       epoch=self.view_epoch)
         return (lease.path, lease.mode, lease.expires_at)
 
     def _revoke_holder(self, holder: str, path: str) -> None:
@@ -928,10 +998,8 @@ class SharedFS:
             try:
                 # retried: a dropped revocation would leave the holder
                 # serving stale cached state against a revoked grant
-                if with_retries(
-                        lambda n=nid: self.transport.rpc(
-                            n, "revoke_holder", holder, path),
-                        stats=self.transport.stats):
+                if self._rpc(nid, "revoke_holder", holder, path,
+                             fenced=True):
                     return
             except Exception:
                 continue  # dead node: its procs died with it
@@ -987,25 +1055,18 @@ class SharedFS:
             def _replay():
                 for nid in others:
                     try:
-                        with_retries(
-                            lambda n=nid: self.transport.rpc(
-                                n, "ensure_slot", proc_id),
-                            stats=self.transport.stats)
+                        self._rpc(nid, "ensure_slot", proc_id,
+                                  fenced=True)
                         if data:
-                            with_retries(
-                                lambda n=nid: self.transport.rpc(
-                                    n, "chain_continue", proc_id, data,
-                                    []),
-                                stats=self.transport.stats)
+                            self._rpc(nid, "chain_continue", proc_id,
+                                      data, [], fenced=True)
                     except Exception:
                         pass  # dead peer: chain repair handles it
                 self.digest_slot(proc_id, acked)
                 for nid in others:
                     try:
-                        with_retries(
-                            lambda n=nid: self.transport.rpc(
-                                n, "digest_slot", proc_id, acked),
-                            stats=self.transport.stats)
+                        self._rpc(nid, "digest_slot", proc_id, acked,
+                                  fenced=True)
                     except Exception:
                         pass  # dead peer: chain repair handles it
 
@@ -1029,6 +1090,74 @@ class SharedFS:
         self.lease_mgr.release_all(proc_id)
         self.local_procs.pop(proc_id, None)
         return applied
+
+    # -- background re-replication (restore the replication factor) -----------
+    def install_bases(self, items: List[Tuple[str, Optional[bytes]]]) -> int:
+        """RPC: bulk-install digested state on a recruited replica —
+        ``(path, value)`` pairs; value None is a tombstone (drop any
+        local copy). One area commit covers the batch."""
+        n = 0
+        for path, v in items:
+            if v is None:
+                self.hot.delete(path)
+                self.cold.delete(path)
+            else:
+                self.hot.put(path, v)
+            n += 1
+        with self._commit_lock:
+            self._evict_if_needed()
+            self._commit_areas()
+        return n
+
+    def rereplicate_to(self, recruit: str) -> Dict[str, int]:
+        """Catch a recruited chain member up in the background: ship
+        every live slot's undigested suffix (seqno-deduped, so a
+        concurrent writer's own pushes interleave safely), then delta-
+        resync the digested namespace by comparing value CRCs
+        (``checksum_exchange`` — integers on the wire) and pushing only
+        differing paths via ``install_bases``. Runs on a digest worker,
+        off the writers' hot path; every message is epoch-fenced, so a
+        membership change mid-resync aborts loudly rather than
+        installing state under a superseded view."""
+        out = {"slots": 0, "suffix_bytes": 0, "paths_checked": 0,
+               "paths_pushed": 0}
+        for proc_id, slot in list(self.slots.items()):
+            self._rpc(recruit, "ensure_slot", proc_id, fenced=True)
+            data = slot.suffix_bytes(0)
+            if data:
+                self._rpc(recruit, "chain_continue", proc_id, data, [],
+                          fenced=True)
+                out["suffix_bytes"] += len(data)
+            out["slots"] += 1
+        # writers homed HERE hold their authoritative log locally (no
+        # slot on this node): their acked-but-undigested suffix must
+        # reach the recruit too, or a later home-node loss would shrink
+        # the acked prefix below what the old chain had acknowledged
+        for proc_id, proc in list(self.local_procs.items()):
+            data = proc.log.encoded_since(0)
+            self._rpc(recruit, "ensure_slot", proc_id, fenced=True)
+            if data:
+                self._rpc(recruit, "chain_continue", proc_id, data, [],
+                          fenced=True)
+                out["suffix_bytes"] += len(data)
+            out["slots"] += 1
+        paths = sorted(set(self.hot.paths()) | set(self.cold.paths()))
+        for i in range(0, len(paths), 64):
+            batch = paths[i:i + 64]
+            mine = self._value_crcs(batch)
+            theirs = self._rpc(recruit, "checksum_exchange", batch,
+                               fenced=True)
+            push = []
+            for p, a, b in zip(batch, mine, theirs):
+                out["paths_checked"] += 1
+                if a is None or a == b:
+                    continue
+                _found, v = self.read_any(p, fetch_base=False)
+                push.append((p, v))
+            if push:
+                self._rpc(recruit, "install_bases", push, fenced=True)
+                out["paths_pushed"] += len(push)
+        return out
 
     # -- epoch-based invalidation on rejoin (paper §3.4) ------------------------------
     def invalidate_since(self, epoch: int) -> int:

@@ -37,6 +37,7 @@ steady-state per-op lease cost is one dict probe.
 from __future__ import annotations
 
 import threading
+import time
 import zlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
@@ -47,7 +48,17 @@ from repro.core.leases import READ, WRITE, covers
 from repro.core.log import SealedRegion, UpdateLog
 from repro.core.replication import ChainClient
 from repro.core.sharedfs import SharedFS
-from repro.core.transport import StaleHandle, with_retries
+from repro.core.transport import (RpcTimeout, StaleEpoch, StaleHandle,
+                                  with_retries)
+
+
+class WriterFenced(RuntimeError):
+    """This writer incarnation is permanently fenced: a receiver
+    rejected its epoch (``StaleEpoch``) or the cluster promoted a
+    successor for its proc_id while it was unreachable. Every further
+    mutation fails — the process must be reopened (a fresh incarnation
+    continuing from the chain-acked watermark). Acked data is safe: an
+    op that would have acked under the superseded view never acked."""
 
 
 class DramCache:
@@ -207,7 +218,9 @@ class LibState:
                  fsync_data: bool = False, pipeline_digests: bool = True,
                  one_sided_reads: bool = True, remote_batch: int = 32,
                  start_seqno: int = 0, settle_before_digest: bool = False,
-                 group_commit: bool = True, verify_reads: bool = True):
+                 group_commit: bool = True, verify_reads: bool = True,
+                 min_replicas: int = 1, degraded_writes: bool = True,
+                 repl_deadline_s: Optional[float] = None):
         assert mode in ("pessimistic", "optimistic")
         self.proc_id = proc_id
         self.sfs = sharedfs
@@ -223,15 +236,30 @@ class LibState:
             fsync_data, start_seqno=start_seqno)
         self.dram = DramCache(dram_capacity)
         peers = [n for n in chain if n != sharedfs.node_id]
+        # every ship carries the node's current view epoch (fencing) and
+        # partition-era retries are bounded by a total-elapsed deadline
         self.chain = ChainClient(proc_id, peers, sharedfs.transport,
-                                 owner=sharedfs.node_id)
+                                 owner=sharedfs.node_id,
+                                 epoch_fn=lambda: sharedfs.view_epoch,
+                                 deadline_s=repl_deadline_s)
+        # under-replication policy: a write needs min_replicas copies
+        # (the local log counts as one); degraded_writes=True acks
+        # degraded and counts it, False blocks with bounded retries
+        self.min_replicas = min_replicas
+        self.degraded_writes = degraded_writes
+        self._repl_deadline_s = repl_deadline_s
+        # non-None once this incarnation is fenced (see WriterFenced)
+        self._fenced: Optional[str] = None
         # one-shot barrier for fast promotion: the predecessor's slot
         # suffix is replaying on the node's digest worker, and the first
         # inline digest must not apply *newer* entries to the areas
         # before that older suffix lands (see promote_dead_process)
         self._settle_before_digest = settle_before_digest
-        # epoch watermark for lease/chain migration (see _check_epoch)
-        self._epoch_seen = self.cluster.epoch
+        # epoch watermark for lease/chain migration (see _check_epoch) —
+        # tracks the NODE's view, not the manager's global epoch: a
+        # partitioned node can only act on what it actually observed
+        self._epoch_seen = sharedfs.view_epoch
+        self._start_epoch = sharedfs.view_epoch
         self.reserves = [n for n in (reserves or [])
                          if n != sharedfs.node_id]
         # remote read tier: reserves first (paper §3.5 — their NVM holds
@@ -258,10 +286,7 @@ class LibState:
         # implicitly by an epoch bump (membership change).
         self._neg: Dict[str, int] = {}
         for n in peers:
-            with_retries(
-                lambda n=n: sharedfs.transport.rpc(n, "ensure_slot",
-                                                   proc_id),
-                stats=sharedfs.transport.stats)
+            sharedfs._rpc(n, "ensure_slot", proc_id, fenced=True)
         sharedfs.local_procs[proc_id] = self
         self.digest_threshold = 0.75
         # pipeline state: threshold digests run on the SharedFS worker
@@ -287,7 +312,8 @@ class LibState:
                       "seal_deferrals": 0,
                       "coalesced_out": 0, "lease_cache_hits": 0,
                       "lease_acquires": 0,
-                      "verified_reads": 0, "corrupt_extents": 0}
+                      "verified_reads": 0, "corrupt_extents": 0,
+                      "degraded_acks": 0, "replica_waits": 0}
 
     # -- epoch migration (paper §3.4: leases migrate via the epoch bump) ------
     def _check_epoch(self) -> None:
@@ -299,15 +325,38 @@ class LibState:
         dead manager's table) — drop DRAM/negative caches that could
         hide a failed-over writer's changes, and re-resolve the replica
         chain so replication targets the repaired membership instead of
-        raising NodeDown at a dead replica forever."""
-        ep = self.cluster.epoch
+        raising NodeDown at a dead replica forever.
+
+        The watermark is the NODE's view epoch — advanced only by
+        channels that reached it (heartbeat acks, epoch headers, a
+        reachable manager watch) — so a partitioned writer keeps its old
+        view and is fenced by receivers, never silently 'migrated'. On
+        observing a bump, a promotion recorded for this proc_id at a
+        newer epoch than this incarnation started at means a successor
+        took over while we were unreachable: fail-stop permanently."""
+        self._fence_check()
+        ep = self.sfs.view_epoch
         if ep == self._epoch_seen:
             return
         self._epoch_seen = ep
+        promo = self.cluster.promotions.get(self.proc_id)
+        if promo is not None and promo > self._start_epoch:
+            self._fence(f"superseded: successor promoted at epoch "
+                        f"{promo} (this incarnation started at "
+                        f"{self._start_epoch})")
         self._lease_cache.clear()
         self._neg.clear()
         self.dram.clear()
         self._refresh_chain()
+
+    def _fence(self, why: str) -> None:
+        self._fenced = why
+        self._lease_cache.clear()
+        raise WriterFenced(f"{self.proc_id}: {why}")
+
+    def _fence_check(self) -> None:
+        if self._fenced is not None:
+            raise WriterFenced(f"{self.proc_id}: {self._fenced}")
 
     def _refresh_chain(self) -> None:
         me = self.sfs.node_id
@@ -436,32 +485,67 @@ class LibState:
         self._neg.pop(src, None)
         self._neg.pop(dst, None)
 
+    def _require_replicas(self) -> None:
+        """Enforce ``min_replicas`` before shipping: the local log is
+        one copy, the chain supplies the rest. Degraded mode counts and
+        proceeds (availability over redundancy — background
+        re-replication restores the factor); blocking mode waits with
+        bounded retries for the chain to be repaired/recruited, then
+        surfaces ``RpcTimeout`` so the caller can decide."""
+        need = self.min_replicas - 1
+        if need <= 0 or len(self.chain.chain) >= need:
+            return
+        if self.degraded_writes:
+            self.stats["degraded_acks"] += 1
+            return
+        deadline = self._repl_deadline_s or 0.5
+        waited, step = 0.0, 0.01
+        while waited < deadline:
+            self.stats["replica_waits"] += 1
+            time.sleep(step)
+            waited += step
+            self._check_epoch()  # a repair/recruit bump refreshes chain
+            if len(self.chain.chain) >= need:
+                return
+        raise RpcTimeout(
+            f"{self.proc_id}: under-replicated ({1 + len(self.chain.chain)}"
+            f" < min_replicas={self.min_replicas}) after {waited:.2f}s")
+
     def fsync(self) -> None:
         self._check_epoch()
-        if self.mode == "pessimistic":
-            gc = getattr(self.sfs, "group_commit", None)
-            if gc is not None and self._group_commit:
-                # group path: the coordinator flushes the log to the OS,
-                # makes the batch durable with ONE journal fsync, and
-                # ships one framed chain slice for every co-committing
-                # process — this writer's per-op fsync is amortized away
-                gc.commit(self, coalesce=False)
+        try:
+            if self.mode == "pessimistic":
+                self._require_replicas()
+                gc = getattr(self.sfs, "group_commit", None)
+                if gc is not None and self._group_commit:
+                    # group path: the coordinator flushes the log to the
+                    # OS, makes the batch durable with ONE journal fsync,
+                    # and ships one framed chain slice for every co-
+                    # committing process — this writer's per-op fsync is
+                    # amortized away
+                    gc.commit(self, coalesce=False)
+                    return
+                self.log.persist()
+                with self._repl_lock:
+                    self._replicate(coalesce=False)
                 return
             self.log.persist()
-            with self._repl_lock:
-                self._replicate(coalesce=False)
-            return
-        self.log.persist()
+        except StaleEpoch as e:
+            self._fence(f"stale epoch on replicate: {e}")
 
     def dsync(self) -> None:
         self._check_epoch()
-        gc = getattr(self.sfs, "group_commit", None)
-        if gc is not None and self._group_commit:
-            gc.commit(self, coalesce=(self.mode == "optimistic"))
-            return
-        self.log.persist()
-        with self._repl_lock:
-            self._replicate(coalesce=(self.mode == "optimistic"))
+        try:
+            self._require_replicas()
+            gc = getattr(self.sfs, "group_commit", None)
+            if gc is not None and self._group_commit:
+                gc.commit(self, coalesce=(self.mode == "optimistic"))
+                return
+            self.log.persist()
+            with self._repl_lock:
+                self._replicate(coalesce=(self.mode == "optimistic"))
+        except StaleEpoch as e:
+            self._fence(f"stale epoch on replicate: {e}")
 
     def _replicate(self, coalesce: bool) -> None:
         """Replicate everything past the chain's watermark — spanning a
@@ -520,9 +604,11 @@ class LibState:
         ``read_remote`` RPC, sliced client-side. Bounded retries absorb
         transient drops — without them a lost locate would demote the
         read to a (possibly staler) next peer or a false miss."""
-        return with_retries(
-            lambda: self._remote_fetch_once(nid, path, offset, length),
-            stats=self.transport.stats)
+        def _attempt():
+            with self.transport.act_as(self.sfs.node_id):
+                return self._remote_fetch_once(nid, path, offset, length)
+
+        return with_retries(_attempt, stats=self.transport.stats)
 
     def _remote_fetch_once(self, nid: str, path: str, offset: int = 0,
                            length: Optional[int] = None):
@@ -601,7 +687,7 @@ class LibState:
                 if fill_cache:
                     self.dram.put(path, v)
             return v
-        if self._neg.get(path) == self.cluster.epoch:
+        if self._neg.get(path) == self.sfs.view_epoch:
             self.stats["neg_hits"] += 1
             return None
         for nid in self.read_peers:  # L3: remote replica NVM
@@ -615,7 +701,7 @@ class LibState:
                     if fill_cache:
                         self.dram.put(path, v)
                 return v
-        self._neg[path] = self.cluster.epoch
+        self._neg[path] = self.sfs.view_epoch
         return None
 
     def _range_below(self, path: str, offset: int, length: int):
@@ -628,7 +714,7 @@ class LibState:
             if v is not None:
                 self.stats["l2_hits"] += 1
             return True, v
-        if self._neg.get(path) == self.cluster.epoch:
+        if self._neg.get(path) == self.sfs.view_epoch:
             self.stats["neg_hits"] += 1
             return False, None
         for nid in self.read_peers:
@@ -640,7 +726,7 @@ class LibState:
                 if v is not None:
                     self.stats["remote_hits"] += 1
                 return True, v
-        self._neg[path] = self.cluster.epoch
+        self._neg[path] = self.sfs.view_epoch
         return False, None
 
     def get_range(self, path: str, offset: int,
@@ -712,7 +798,7 @@ class LibState:
                     self.dram.put(p, v)
                 out[p] = v
                 continue
-            if self._neg.get(p) == self.cluster.epoch:
+            if self._neg.get(p) == self.sfs.view_epoch:
                 self.stats["neg_hits"] += 1
                 out[p] = None
                 continue
@@ -726,7 +812,7 @@ class LibState:
                 remaining = self._multiget_peer(nid, remaining, out)
             for p in remaining:  # absent everywhere: remember the miss
                 out[p] = None
-                self._neg[p] = self.cluster.epoch
+                self._neg[p] = self.sfs.view_epoch
         return {p: out[p] for p in paths}
 
     def _multiget_peer(self, nid: str, paths: List[str],
@@ -734,15 +820,18 @@ class LibState:
         """Resolve ``paths`` against one peer; returns the still-missing
         suffix for the next peer. Tombstones are authoritative."""
         still: List[str] = []
+        me = self.sfs.node_id
         for i in range(0, len(paths), self.remote_batch):
             chunk = paths[i:i + self.remote_batch]
             try:
                 if self.one_sided_reads:
-                    descs = with_retries(
-                        lambda: self.transport.rpc(
-                            nid, "locate_batch",
-                            [(p, 0, None) for p in chunk]),
-                        stats=self.transport.stats)
+                    def _locate():
+                        with self.transport.act_as(me):
+                            return self.transport.rpc(
+                                nid, "locate_batch",
+                                [(p, 0, None) for p in chunk])
+                    descs = with_retries(_locate,
+                                         stats=self.transport.stats)
                 else:
                     descs = None  # legacy: per-path whole-blob RPC
             except Exception:
@@ -751,15 +840,19 @@ class LibState:
             for j, p in enumerate(chunk):
                 try:
                     if descs is None:
+                        def _blob(p=p):
+                            with self.transport.act_as(me):
+                                return self.transport.rpc(
+                                    nid, "read_remote", p)
                         found, v = with_retries(
-                            lambda p=p: self.transport.rpc(
-                                nid, "read_remote", p),
-                            stats=self.transport.stats)
+                            _blob, stats=self.transport.stats)
                     else:
+                        def _pull(p=p, j=j):
+                            with self.transport.act_as(me):
+                                return self._resolve_desc(
+                                    nid, p, descs[j], 0, None)
                         found, v = with_retries(
-                            lambda p=p, j=j: self._resolve_desc(
-                                nid, p, descs[j], 0, None),
-                            stats=self.transport.stats)
+                            _pull, stats=self.transport.stats)
                 except Exception:
                     still.append(p)
                     continue
@@ -881,24 +974,28 @@ class LibState:
     # -- digest (synchronous: replicate + apply + truncate) ----------------------
     def digest(self) -> None:
         self._check_epoch()
-        if self._settle_before_digest:
-            # fast promotion queued the predecessor's slot replay on the
-            # node's FIFO digest worker: let that older suffix land in
-            # the areas before this digest applies newer entries over it
-            self.sfs.drain_digests()
-            self._settle_before_digest = False
-        self._reap(wait=True)
-        self.log.persist()
-        with self._repl_lock:
-            self._replicate(coalesce=(self.mode == "optimistic"))
-        upto = self.log.last_seqno
-        # every undigested entry has seqno <= last_seqno by construction;
-        # apply the already-materialized list directly
-        self.sfs.digest_entries(self.log.entries_since(0))
-        self.chain.digest_fanout(upto)
-        self.log.truncate_through(upto)
-        self.stats["digests"] += 1
-        self.stats["inline_digests"] += 1
+        try:
+            if self._settle_before_digest:
+                # fast promotion queued the predecessor's slot replay on
+                # the node's FIFO digest worker: let that older suffix
+                # land in the areas before this digest applies newer
+                # entries over it
+                self.sfs.drain_digests()
+                self._settle_before_digest = False
+            self._reap(wait=True)
+            self.log.persist()
+            with self._repl_lock:
+                self._replicate(coalesce=(self.mode == "optimistic"))
+            upto = self.log.last_seqno
+            # every undigested entry has seqno <= last_seqno by
+            # construction; apply the already-materialized list directly
+            self.sfs.digest_entries(self.log.entries_since(0))
+            self.chain.digest_fanout(upto)
+            self.log.truncate_through(upto)
+            self.stats["digests"] += 1
+            self.stats["inline_digests"] += 1
+        except StaleEpoch as e:
+            self._fence(f"stale epoch on digest: {e}")
 
     def flush_for_revocation(self) -> None:
         """Lease revocation grace: replicate + digest so the next holder
@@ -958,14 +1055,9 @@ def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
                 # retried: a transiently dropped re-ship would leave one
                 # replica's slot missing the tail — and serving stale
                 # mirror state — while this node digests it
-                with_retries(
-                    lambda n=nid: sharedfs.transport.rpc(
-                        n, "ensure_slot", proc_id),
-                    stats=sharedfs.transport.stats)
-                with_retries(
-                    lambda n=nid: sharedfs.transport.rpc(
-                        n, "chain_continue", proc_id, enc, []),
-                    stats=sharedfs.transport.stats)
+                sharedfs._rpc(nid, "ensure_slot", proc_id, fenced=True)
+                sharedfs._rpc(nid, "chain_continue", proc_id, enc, [],
+                              fenced=True)
             except Exception:
                 pass  # dead replica: chain repair handles it
     if entries:
@@ -976,10 +1068,8 @@ def recover_process(proc_id: str, sharedfs: SharedFS, chain: List[str],
     for nid in chain:
         if nid != sharedfs.node_id:
             try:
-                with_retries(
-                    lambda n=nid: sharedfs.transport.rpc(
-                        n, "digest_slot", proc_id, upto),
-                    stats=sharedfs.transport.stats)
+                sharedfs._rpc(nid, "digest_slot", proc_id, upto,
+                              fenced=True)
             except Exception:
                 pass  # dead replica: chain repair handles it
     sharedfs.lease_mgr.release_all(proc_id)

@@ -23,6 +23,7 @@ Swapping this class for a real ICI/DCN transport changes no caller code.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import random
 import threading
@@ -32,6 +33,14 @@ from dataclasses import dataclass, field
 
 class NodeDown(RuntimeError):
     pass
+
+
+class StaleEpoch(RuntimeError):
+    """An RPC or one-sided write arrived carrying a view epoch older
+    than the receiver's. The sender is fenced: it missed a membership
+    change (its chain/lease view is stale) and must refresh before any
+    further mutation — retrying the same message can never succeed, so
+    ``with_retries`` deliberately does NOT retry this."""
 
 
 class StaleHandle(RuntimeError):
@@ -47,30 +56,49 @@ class RpcTimeout(RuntimeError):
 
 def with_retries(fn, *, attempts: int = 4, backoff_s: float = 2e-4,
                  retriable=(RpcTimeout,), stats: "TransportStats" = None,
-                 jitter: float = 0.5, rng=random):
+                 jitter: float = 0.5, rng=random,
+                 deadline_s: float = None):
     """Bounded retry with jittered exponential backoff for transient
     transport faults. ``fn`` must be idempotent at the receiver (chain
     appends dedup by seqno, digests re-apply cleanly, lease grants
     refresh). ``NodeDown`` is deliberately NOT retriable by default: a
     dead peer needs failure detection + chain repair, not a retry storm.
+    ``StaleEpoch`` must likewise never be listed retriable: a fenced
+    sender needs a view refresh, and the same bytes can never succeed.
 
     Each sleep is scaled by a uniform draw from ``[1-jitter, 1]``:
     concurrent callers that hit the same dead hop in the same instant
     would otherwise back off in lockstep and re-collide on every round
     (a synchronized retry storm); decorrelating the delays spreads the
-    retries across the window while keeping the exponential envelope."""
+    retries across the window while keeping the exponential envelope.
+
+    ``deadline_s`` caps the *total elapsed* time across all attempts:
+    during a partition every try times out after its own full wait, so
+    the exponential schedule alone can stall a writer for far longer
+    than any availability budget. Once the deadline is spent the last
+    retriable error is re-raised immediately and each backoff sleep is
+    clamped to the time remaining."""
     delay = backoff_s
+    start = time.monotonic() if deadline_s is not None else None
     for k in range(attempts):
         try:
             return fn()
         except retriable:
             if k == attempts - 1:
                 raise
+            remaining = None
+            if deadline_s is not None:
+                remaining = deadline_s - (time.monotonic() - start)
+                if remaining <= 0:
+                    raise
             if stats is not None:
                 stats.retries += 1
             if delay > 0:
                 scale = 1.0 - jitter * rng.random() if jitter > 0 else 1.0
-                time.sleep(delay * scale)
+                sleep = delay * scale
+                if remaining is not None:
+                    sleep = min(sleep, remaining)
+                time.sleep(sleep)
                 delay *= 2
 
 
@@ -151,7 +179,15 @@ class Transport:
         self._endpoints = {}
         self._regions = {}
         self._down = set()
+        # directed blocked links (src, dst): a partitioned message is
+        # indistinguishable from a lost one, so blocked sends raise
+        # RpcTimeout (transient), never NodeDown (the peer is healthy)
+        self._blocked = set()
         self._lock = threading.RLock()
+        # who is sending on this thread (see act_as): partition checks
+        # and epoch headers need a sender identity, and worker threads
+        # must self-identify at their entry points
+        self._sender = threading.local()
         self.stats = TransportStats()
         self.injector = None       # optional FaultInjector (see faults.py)
         self.on_crash = None       # callback(node_id) for crash faults
@@ -194,26 +230,129 @@ class Transport:
     def is_down(self, node_id: str) -> bool:
         return node_id in self._down
 
+    def has_endpoint(self, node_id: str) -> bool:
+        return node_id in self._endpoints
+
+    # -- sender identity ---------------------------------------------------
+    @contextlib.contextmanager
+    def act_as(self, node_id: str):
+        """Declare the sending node for transport ops on this thread.
+        Nested uses restore the previous identity on exit. RPC dispatch
+        sets the identity to the receiving node around the endpoint
+        call, so chain forwards made *inside* a handler carry the
+        forwarding hop as their sender automatically."""
+        prev = getattr(self._sender, "node", None)
+        self._sender.node = node_id
+        try:
+            yield
+        finally:
+            self._sender.node = prev
+
+    def sender(self):
+        return getattr(self._sender, "node", None)
+
+    # -- partitions --------------------------------------------------------
+    def partition(self, a, b, mode: str = "both") -> None:
+        """Block links between node sets ``a`` and ``b``. ``mode`` is
+        ``both`` (symmetric), ``a_to_b`` or ``b_to_a`` (asymmetric —
+        messages flow one way only, the classic one-way-link failure).
+        Partial partitions (only some pairs blocked) come from calling
+        this with smaller sets, or ``block_link`` for a single pair."""
+        a = [a] if isinstance(a, str) else list(a)
+        b = [b] if isinstance(b, str) else list(b)
+        with self._lock:
+            for x in a:
+                for y in b:
+                    if x == y:
+                        continue
+                    if mode in ("both", "a_to_b"):
+                        self._blocked.add((x, y))
+                    if mode in ("both", "b_to_a"):
+                        self._blocked.add((y, x))
+
+    def heal(self, a=None, b=None) -> None:
+        """Unblock links. No arguments heals everything; with sets the
+        pairs between them (both directions) are removed."""
+        with self._lock:
+            if a is None and b is None:
+                self._blocked.clear()
+                return
+            a = [a] if isinstance(a, str) else list(a)
+            b = [b] if isinstance(b, str) else list(b)
+            for x in a:
+                for y in b:
+                    self._blocked.discard((x, y))
+                    self._blocked.discard((y, x))
+
+    def block_link(self, src: str, dst: str) -> None:
+        with self._lock:
+            self._blocked.add((src, dst))
+
+    def link_blocked(self, src, dst: str) -> bool:
+        """Is the directed link src->dst blocked? ``src=None`` (no
+        declared sender) is never blocked — partition checks only bind
+        once a sender identity is established."""
+        if src is None or not self._blocked:
+            return False
+        return (src, dst) in self._blocked
+
+    def _check_link(self, dst: str, what: str):
+        # callers guard on self._blocked, so the hot path (no partition
+        # anywhere) never reaches the thread-local read or the f-string
+        src = getattr(self._sender, "node", None)
+        if src is not None and (src, dst) in self._blocked:
+            raise RpcTimeout(f"{what}@{dst} (partitioned from {src})")
+
     def _check(self, node_id: str):
         if node_id in self._down:
             raise NodeDown(node_id)
         if node_id not in self._endpoints:
             raise NodeDown(f"{node_id} (unregistered)")
 
+    # -- epoch fencing -----------------------------------------------------
+    @staticmethod
+    def _fence(receiver, dst: str, what: str, epoch) -> None:
+        """Check a message's ``_epoch`` header against the receiver's
+        view. Older → StaleEpoch back to the sender. Newer → the
+        receiver adopts it first (epochs propagate on every message, so
+        a heal catches nodes up without waiting for a heartbeat)."""
+        if epoch is None or receiver is None:
+            return
+        view = getattr(receiver, "view_epoch", None)
+        if view is None:
+            return
+        if epoch < view:
+            raise StaleEpoch(f"{what}@{dst}: epoch {epoch} < view {view}")
+        if epoch > view:
+            observe = getattr(receiver, "observe_epoch", None)
+            if observe is not None:
+                observe(epoch)
+
     # -- RPC ---------------------------------------------------------------
     def rpc(self, dst: str, method: str, *args, **kwargs):
         self._check(dst)
+        if self._blocked:
+            self._check_link(dst, method)
+        epoch = kwargs.pop("_epoch", None) if kwargs else None
         inj = self.injector
         act = inj.rpc_action(dst, method) if inj is not None else None
         if act == "drop":
             raise RpcTimeout(f"rpc {method}@{dst} (injected drop)")
+        ep = self._endpoints[dst]
+        if epoch is not None:
+            self._fence(ep, dst, method, epoch)
         nbytes = sum(payload_bytes(a) for a in args)
         self.stats.account(dst, nbytes + 64, "rpc")  # 64B header model
-        result = getattr(self._endpoints[dst], method)(*args, **kwargs)
-        if act == "dup":
-            # retransmitted duplicate: the receiver sees the call twice
-            self.stats.account(dst, nbytes + 64, "rpc")
-            result = getattr(self._endpoints[dst], method)(*args, **kwargs)
+        prev = getattr(self._sender, "node", None)
+        self._sender.node = dst  # handler-side forwards send as dst
+        try:
+            result = getattr(ep, method)(*args, **kwargs)
+            if act == "dup":
+                # retransmitted duplicate: the receiver sees the call twice
+                self.stats.account(dst, nbytes + 64, "rpc")
+                result = getattr(ep, method)(*args, **kwargs)
+        finally:
+            self._sender.node = prev
         resp = payload_bytes(result)
         if resp:
             self.stats.respond(dst, resp)
@@ -225,8 +364,10 @@ class Transport:
         self._regions[(node_id, region_id)] = sink
 
     def one_sided_write(self, dst: str, region_id: str, data: bytes,
-                        offset=None) -> None:
+                        offset=None, _epoch=None) -> None:
         self._check(dst)
+        if self._blocked:
+            self._check_link(dst, region_id)
         sink = self._regions.get((dst, region_id))
         if sink is None:
             raise KeyError(f"region {region_id} not registered on {dst}")
@@ -234,6 +375,12 @@ class Transport:
         act = inj.write_action(dst, region_id) if inj is not None else None
         if act == "drop":
             raise RpcTimeout(f"write {region_id}@{dst} (injected drop)")
+        # an epoch-stamped one-sided write fences against the region
+        # owner's view: RDMA can't check this NIC-side, but Assise pairs
+        # every slot push with an epoch-carrying chain RPC — modeling
+        # the check here keeps the slot bytes and the fence atomic
+        if _epoch is not None:
+            self._fence(self._endpoints.get(dst), dst, region_id, _epoch)
         self.stats.account(dst, len(data), "write")
         sink.write(offset, data)
         if act == "dup":
@@ -253,6 +400,8 @@ class Transport:
         result, so a torn check-then-read window can never hand back
         recycled bytes as the value."""
         self._check(dst)
+        if self._blocked:
+            self._check_link(dst, region_id)
         sink = self._regions.get((dst, region_id))
         if sink is None:
             raise KeyError(f"region {region_id} not registered on {dst}")

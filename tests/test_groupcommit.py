@@ -59,9 +59,9 @@ def test_group_batch_ships_each_entry_exactly_once(gcluster):
     calls = []
     real = tr.one_sided_write
 
-    def spy(dst, region_id, data, offset=0):
+    def spy(dst, region_id, data, offset=0, **kw):
         calls.append((dst, region_id, len(data)))
-        return real(dst, region_id, data, offset)
+        return real(dst, region_id, data, offset, **kw)
 
     tr.one_sided_write = spy
     try:
@@ -98,9 +98,9 @@ def test_retry_after_dropped_ack_does_not_reship_payload(gcluster):
     calls = []
     real = tr.one_sided_write
 
-    def spy(dst, region_id, data, offset=0):
+    def spy(dst, region_id, data, offset=0, **kw):
         calls.append(region_id)
-        return real(dst, region_id, data, offset)
+        return real(dst, region_id, data, offset, **kw)
 
     tr.one_sided_write = spy
     try:

@@ -1,0 +1,365 @@
+"""Partition tolerance (PR 9): epoch-fenced membership, minority
+fail-stop, chain reconfiguration, and background re-replication.
+
+The invariant under test throughout: once ANY node has observed epoch
+e+1, no write can be acknowledged at epoch e — a partitioned writer is
+either rejected by a fenced receiver (StaleEpoch -> WriterFenced) or
+fail-stops on lease renewal before it can ack anything.
+"""
+import time
+
+import pytest
+
+from repro.core import (AssiseCluster, PartitionSchedule, PartitionSpec,
+                        RpcTimeout, StaleEpoch, WriterFenced, with_retries)
+from repro.core.transport import Transport
+
+
+@pytest.fixture
+def clk():
+    """Mutable fake cluster clock: tests advance time explicitly."""
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    clock.advance = lambda dt: t.__setitem__(0, t[0] + dt)
+    return clock
+
+
+def make(tmp_path, clock=None, **kw):
+    kw.setdefault("n_nodes", 3)
+    kw.setdefault("replication", 2)
+    if clock is not None:
+        kw["clock"] = clock
+    return AssiseCluster(str(tmp_path / "c"), **kw)
+
+
+# -- with_retries: deadline cap + StaleEpoch is never retried -----------------
+
+def test_with_retries_deadline_caps_total_elapsed():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise RpcTimeout("wire")
+
+    t0 = time.monotonic()
+    with pytest.raises(RpcTimeout):
+        with_retries(fn, attempts=50, backoff_s=0.05, jitter=0.0,
+                     deadline_s=0.08)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 1.0  # far below the 50-attempt exponential schedule
+    assert 2 <= len(calls) < 50
+
+
+def test_with_retries_never_retries_stale_epoch():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise StaleEpoch("fenced")
+
+    with pytest.raises(StaleEpoch):
+        with_retries(fn, attempts=8)
+    assert len(calls) == 1  # the same bytes can never succeed
+
+
+# -- transport partitions: symmetric / asymmetric / partial -------------------
+
+class _Sink:
+    def __init__(self):
+        self.data = b""
+
+    def write(self, offset, data):
+        self.data += data
+
+    def read(self, offset, size):
+        return self.data[offset:offset + size]
+
+
+class _Echo:
+    def ping(self):
+        return b"pong"
+
+
+def _transport_pair():
+    tr = Transport()
+    tr.register_endpoint("a", _Echo())
+    tr.register_endpoint("b", _Echo())
+    tr.register_region("b", "r", _Sink())
+    return tr
+
+
+def test_symmetric_partition_blocks_both_directions():
+    tr = _transport_pair()
+    tr.partition("a", "b")
+    with tr.act_as("a"):
+        with pytest.raises(RpcTimeout):
+            tr.rpc("b", "ping")
+        with pytest.raises(RpcTimeout):
+            tr.one_sided_write("b", "r", b"x")
+        with pytest.raises(RpcTimeout):
+            tr.one_sided_read("b", "r", 0, 1)
+    with tr.act_as("b"):
+        with pytest.raises(RpcTimeout):
+            tr.rpc("a", "ping")
+    tr.heal()
+    with tr.act_as("a"):
+        assert tr.rpc("b", "ping") == b"pong"
+
+
+def test_asymmetric_partition_blocks_one_direction():
+    tr = _transport_pair()
+    tr.partition("a", "b", mode="a_to_b")
+    with tr.act_as("a"):
+        with pytest.raises(RpcTimeout):
+            tr.rpc("b", "ping")
+    with tr.act_as("b"):
+        assert tr.rpc("a", "ping") == b"pong"  # reverse link healthy
+    tr.heal("a", "b")
+    with tr.act_as("a"):
+        assert tr.rpc("b", "ping") == b"pong"
+
+
+def test_unidentified_sender_is_never_partitioned():
+    # partition checks bind to a declared sender identity: local calls
+    # made outside any act_as (e.g. a test poking an endpoint) pass
+    tr = _transport_pair()
+    tr.partition("a", "b")
+    assert tr.rpc("b", "ping") == b"pong"
+
+
+def test_partition_schedule_applies_and_heals_on_ticks():
+    tr = _transport_pair()
+    sched = PartitionSchedule(tr, [
+        PartitionSpec(a=("a",), b=("b",), start=1.0, heal=3.0)])
+    assert sched.tick(0.5) == []
+    assert not tr.link_blocked("a", "b")
+    events = sched.tick(1.0)
+    assert events and tr.link_blocked("a", "b")
+    assert sched.tick(2.0) == []  # idempotent between edges
+    events = sched.tick(3.5)
+    assert events and not tr.link_blocked("a", "b")
+    assert sched.done()
+
+
+# -- heartbeats through the transport: suspicion + rejoin ---------------------
+
+def test_partition_drives_suspicion_and_heal_rejoins(tmp_path, clk):
+    c = make(tmp_path, clock=clk)
+    try:
+        c.partition("node0")  # minority cut: node0 vs {node1,node2,cm}
+        clk.advance(2.0)      # > HEARTBEAT_TIMEOUT
+        c.heartbeat_all()     # node0's heartbeat is lost on the wire
+        failed = c.cm.check_heartbeats()
+        assert failed == ["node0"]
+        assert c.cm.epoch == 1
+        assert c.cm.subtree_chains["/"] == ["node1"]
+        assert c.cm.check_heartbeats() == []  # no double-declare
+
+        c.heal_partition()
+        c.heartbeat_all()     # heartbeat flows again -> rejoin
+        assert c.cm.nodes["node0"].alive
+        # the rejoined node caught up to the view it missed
+        assert c.sharedfs["node0"].view_epoch == 1
+    finally:
+        c.close()
+
+
+def test_two_simultaneous_deaths_cost_one_epoch_bump(tmp_path):
+    c = make(tmp_path, n_nodes=5, replication=3, n_reserve=2)
+    try:
+        assert c.cm.subtree_chains["/"] == ["node0", "node1", "node2"]
+        before = c.cm.epoch
+        c.kill_node("node1")
+        c.kill_node("node2")
+        assert c.detect_failures_now() == ["node1", "node2"]
+        assert c.cm.epoch == before + 1  # ONE bump for the batch
+        # both vacancies filled from the reserve pool, in order
+        assert c.cm.subtree_chains["/"] == ["node0", "node3", "node4"]
+        assert c.cm.reserves["/"] == []
+        # re-reports of the same deaths are idempotent
+        c.cm.on_node_failed("node1")
+        c.cm.on_nodes_failed(["node1", "node2"])
+        assert c.cm.epoch == before + 1
+    finally:
+        c.close()
+
+
+# -- epoch fencing ------------------------------------------------------------
+
+def test_stale_writer_is_fenced_and_acks_nothing(tmp_path):
+    """No ack at epoch e once any node observed e+1: a writer that
+    missed a membership change is rejected by the receiver's fence on
+    its next ship, permanently."""
+    c = make(tmp_path)
+    try:
+        ls = c.open_process("p", node_id="node0")
+        ls.put("/k0", b"v0")
+        ls.fsync()
+        acked_before = c.sharedfs["node1"].slot_acked("p")
+
+        # node0 loses the manager but keeps its data link to node1
+        c.transport.partition("node0", "cm")
+        c.kill_node("node2")        # spare dies -> epoch bump at the cm
+        c.detect_failures_now()
+        assert c.sharedfs["node1"].view_epoch == 1  # watcher push
+        assert c.sharedfs["node0"].view_epoch == 0  # gated by partition
+
+        ls.put("/k1", b"v1")
+        with pytest.raises(WriterFenced):
+            ls.fsync()              # node1 rejects the stale header
+        # nothing was acknowledged at the stale epoch
+        assert c.sharedfs["node1"].slot_acked("p") == acked_before
+        # the incarnation is fenced for good, even after a heal
+        c.heal_partition()
+        with pytest.raises(WriterFenced):
+            ls.fsync()
+    finally:
+        c.close()
+
+
+def test_epoch_adoption_via_message_headers(tmp_path):
+    """Epochs propagate on every fenced message: a node cut off from
+    the manager's push still catches up from the first peer that talks
+    to it at the newer epoch."""
+    c = make(tmp_path)
+    try:
+        ls = c.open_process("p", node_id="node0")
+        ls.put("/k0", b"v0")
+        ls.fsync()
+        c.transport.partition("cm", "node1", mode="a_to_b")
+        c.cm.bump_epoch()
+        assert c.sharedfs["node0"].view_epoch == 1
+        assert c.sharedfs["node1"].view_epoch == 0  # missed the push
+        ls.put("/k1", b"v1")
+        ls.fsync()  # header epoch 1 > node1's view: adopt, then accept
+        assert c.sharedfs["node1"].view_epoch == 1
+        assert c.sharedfs["node1"].slot_acked("p") == 2
+    finally:
+        c.close()
+
+
+def test_partitioned_writer_superseded_after_heal(tmp_path, clk):
+    """The §3.5 dual-incarnation case: a successor is promoted while
+    the old writer sits in the minority; on heal the old incarnation
+    observes the promotion epoch and fail-stops instead of dueling."""
+    c = make(tmp_path, clock=clk)
+    try:
+        ls0 = c.open_process("p", node_id="node0")
+        ls0.put("/k0", b"acked-before-partition")
+        ls0.fsync()
+
+        c.partition("node0")
+        clk.advance(2.0)
+        c.heartbeat_all()
+        assert c.cm.check_heartbeats() == ["node0"]
+        ls1 = c.failover_process("p")      # successor on node1
+        assert c.cm.promotions["p"] == c.cm.epoch
+        ls1.put("/k1", b"successor")
+        ls1.fsync()
+
+        c.heal_partition()
+        c.heartbeat_all()                  # node0 rejoins + observes
+        with pytest.raises(WriterFenced):
+            ls0.put("/k2", b"zombie")  # fenced at the first op
+        with pytest.raises(WriterFenced):
+            ls0.fsync()                # and permanently
+        # acked data survived the whole episode, served by the successor
+        assert ls1.get("/k0") == b"acked-before-partition"
+        assert ls1.get("/k1") == b"successor"
+        assert ls1.get("/k2") is None      # the zombie write acked nowhere
+    finally:
+        c.close()
+
+
+def test_minority_writer_fail_stops_on_lease_renewal(tmp_path, clk):
+    """A partitioned writer that has NOT yet observed any bump is not
+    fenced — it simply cannot renew leases once its caches expire
+    (bounded RpcTimeout), and resumes after the heal."""
+    c = make(tmp_path, clock=clk)
+    try:
+        ls = c.open_process("p", node_id="node0")
+        ls.put("/k0", b"v0")
+        ls.fsync()
+        c.partition("node0", ["cm"])       # manager link only
+        clk.advance(10.0)                  # > lease TTL and manager TTL
+        t0 = time.monotonic()
+        with pytest.raises(RpcTimeout):
+            ls.put("/k1", b"v1")           # lease renewal can't resolve
+        assert time.monotonic() - t0 < 2.0  # bounded, not a retry storm
+        c.heal_partition()
+        ls.put("/k1", b"v1")               # transient: same incarnation
+        ls.fsync()                         # resumes once healed
+        assert ls.get("/k1") == b"v1"
+    finally:
+        c.close()
+
+
+# -- chain reconfiguration + background re-replication ------------------------
+
+def test_rereplication_restores_factor_in_background(tmp_path):
+    c = make(tmp_path, auto_rereplicate=True)
+    try:
+        ls = c.open_process("p", node_id="node0")
+        for i in range(8):
+            ls.put(f"/d/k{i}", bytes([i]) * 128)
+        ls.fsync()
+        ls.digest()                        # digested namespace to resync
+        for i in range(8, 12):
+            ls.put(f"/d/k{i}", bytes([i]) * 128)
+        ls.fsync()                         # acked-but-undigested suffix
+
+        c.kill_node("node1")               # the only replica dies
+        assert c.detect_failures_now() == ["node1"]
+        assert c.cm.subtree_chains["/"] == ["node0", "node2"]
+        c.rereplication_settle()
+
+        # the recruit's slot watermark covers everything ever acked
+        assert c.sharedfs["node2"].slot_acked("p") == 12
+        # and its digested namespace matches the survivor's, value CRCs
+        paths = [f"/d/k{i}" for i in range(8)]
+        src = c.sharedfs["node0"].checksum_exchange(paths)
+        dst = c.sharedfs["node2"].checksum_exchange(paths)
+        assert src == dst
+        # the writer keeps going against the repaired chain
+        ls.put("/d/k12", b"after-repair")
+        ls.fsync()
+        assert c.sharedfs["node2"].slot_acked("p") == 13
+    finally:
+        c.close()
+
+
+def test_recruit_never_resurrects_an_empty_chain(tmp_path):
+    c = make(tmp_path)
+    try:
+        c.cm.subtree_chains["/x"] = []
+        assert c.cm.recruit("/x", 2) is None  # no split-brain from zero
+        assert c.cm.recruit("/", 2) is None   # already at target
+    finally:
+        c.close()
+
+
+def test_min_replicas_blocks_then_degraded_mode_acks(tmp_path):
+    c = make(tmp_path, n_nodes=2, min_replicas=2, degraded_writes=False,
+             repl_deadline_s=0.05)
+    try:
+        ls = c.open_process("p", node_id="node0")
+        ls.put("/k0", b"v0")
+        ls.fsync()                         # both copies present: fine
+        c.kill_node("node1")
+        c.detect_failures_now()
+        ls.put("/k1", b"v1")
+        with pytest.raises(RpcTimeout):
+            ls.fsync()                     # blocked: would under-ack
+        assert ls.stats["replica_waits"] > 0
+
+        # degraded mode: availability over redundancy, counted
+        ls2 = c.open_process("p2", node_id="node0", degraded_writes=True)
+        ls2.put("/q", b"v")
+        ls2.fsync()
+        assert ls2.stats["degraded_acks"] > 0
+        assert ls2.get("/q") == b"v"
+    finally:
+        c.close()
