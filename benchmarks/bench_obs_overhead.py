@@ -1,0 +1,88 @@
+"""Fig 20: observability overhead — put latency with tracing off,
+sampled (the default 1/64), and full (every op traced).
+
+The tracing hot path is designed to cost one branch and one counter
+when an op is not sampled, so the sampled run's tail must sit on top
+of the untraced run: compare.py gates ``fig20.put4k_sampled`` p99 at
+<= ``--obs-overhead-max-ratio`` (default 1.1x) of
+``fig20.put4k_untraced`` p99, within the same BENCH file (machine-
+speed independent, like the fig18 verification gate).
+
+Measurement discipline (the fig18 idiom, tightened): GC off, and the
+two gated modes run **interleaved in one cluster** — each block times
+an untraced half then flips the tracer to 1/64 for the sampled half,
+so a digest cycle or OS stall pollutes the *same* block of both modes
+and cannot masquerade as tracing overhead. The reported p99 is the
+median of per-half-block p99s. The full-sampling row runs separately
+and is informational: it prices the worst case (every op allocates a
+trace and records spans at each pipeline stage) and is what tests run
+with.
+"""
+from __future__ import annotations
+
+import gc
+import statistics
+import time as T
+
+from benchmarks.common import pct, row, tmpdir
+from repro.core import AssiseCluster
+
+BLOCKS = 24
+HALF = 125  # ops per mode per block
+
+
+def _loop(ls, val, count, i0):
+    out = []
+    for i in range(i0, i0 + count):
+        t0 = T.perf_counter()
+        ls.put(f"/obs/{i % 128}", val)
+        out.append((T.perf_counter() - t0) * 1e6)
+        if i % 4 == 3:
+            ls.fsync()  # pacing: untimed in every mode
+    return out
+
+
+def bench_obs_overhead() -> None:
+    val = b"x" * 4096
+    c = AssiseCluster(tmpdir("obs"), n_nodes=3, replication=2,
+                      trace_sampling=0.0)
+    ls = c.open_process("p")
+    _loop(ls, val, 200, 0)  # warm: slots, lease cache, first digests
+    i = [200]
+
+    def half(sampling):
+        c.set_trace_sampling(sampling)
+        out = _loop(ls, val, HALF, i[0])
+        i[0] += HALF
+        return out
+
+    untraced, sampled = [], []
+    gc_was = gc.isenabled()
+    gc.disable()  # collector pauses would dominate the gated p99
+    try:
+        for _ in range(BLOCKS):
+            untraced.append(half(0.0))
+            sampled.append(half(1 / 64))
+    finally:
+        if gc_was:
+            gc.enable()
+    for tag, blocks in (("untraced", untraced), ("sampled", sampled)):
+        lat = [x for b in blocks for x in b]
+        p99 = statistics.median(pct(b, 99) for b in blocks)
+        row(f"fig20.put4k_{tag}", statistics.fmean(lat),
+            f"interleaved {BLOCKS}x{HALF}ops "
+            f"p99=median-of-block-p99s",
+            p50=pct(lat, 50), p99=p99, p999=pct(lat, 99.9))
+    # worst case: every op traced end to end (the test configuration)
+    c.set_trace_sampling(1.0)
+    blocks = [_loop(ls, val, HALF, i[0] + k * HALF) for k in range(BLOCKS)]
+    lat = [x for b in blocks for x in b]
+    row("fig20.put4k_traced", statistics.fmean(lat),
+        f"sampling=1 traces={len(c.transport.tracer.traces())}",
+        p50=pct(lat, 50),
+        p99=statistics.median(pct(b, 99) for b in blocks),
+        p999=pct(lat, 99.9))
+    c.destroy()
+
+
+ALL = [bench_obs_overhead]

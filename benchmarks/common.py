@@ -12,7 +12,22 @@ import statistics
 import tempfile
 import time
 
+from repro.core.transport import modeled_wire_s
+
 ROWS = []
+
+
+def modeled_us(*, bytes_sent: float = 0, rpcs: int = 0,
+               one_sided_writes: int = 0, one_sided_reads: int = 0) -> float:
+    """Modeled wire microseconds for a message mix — the single home of
+    the Table-1 NVM-RDMA cost model (``transport.modeled_wire_s``).
+    Benchmarks price hypothetical message mixes through this instead of
+    re-inlining ``NET_LAT_WRITE_S + bytes / NET_BW_BPS`` arithmetic, so
+    the formula cannot drift between the accounting layer and the
+    derivation strings."""
+    return modeled_wire_s(bytes_sent=bytes_sent, rpcs=rpcs,
+                          one_sided_writes=one_sided_writes,
+                          one_sided_reads=one_sided_reads) * 1e6
 
 
 def row(name: str, us_per_call: float, derived: str = "", *,

@@ -45,7 +45,7 @@ def main() -> int:
                          "in the repo root")
     ap.add_argument("--prefixes",
                     default="fig10.,table1.,fig12.,fig13.,fig14.,fig15.,"
-                            "fig17.,fig18.,fig19.",
+                            "fig17.,fig18.,fig19.,fig20.",
                     help="comma-separated row-name prefixes to guard")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when new/old us_per_call exceeds this")
@@ -80,6 +80,14 @@ def main() -> int:
                          "p99 — the checksum check must stay off the "
                          "critical path's tail. Pass 0 to disable. "
                          "Skipped when the NEW dump has no fig18 rows.")
+    ap.add_argument("--obs-overhead-max-ratio", type=float, default=1.1,
+                    help="observability gate (fig20, within-file): fail "
+                         "when the NEW dump's sampled-tracing put p99 "
+                         "exceeds this multiple of the untraced p99 — "
+                         "default-on tracing must cost a branch and a "
+                         "counter on unsampled ops, never a tail. Pass "
+                         "0 to disable. Skipped when the NEW dump has "
+                         "no fig20 rows.")
     ap.add_argument("--unavailability-max", type=float, default=2000.0,
                     help="partition-tolerance gate (fig19, within-file): "
                          "fail when any fig19 row's unavailability_ms "
@@ -193,6 +201,19 @@ def main() -> int:
               f"{args.verify_overhead_max_ratio}x){flag}")
         if flag:
             regressed.append("fig18.verify_overhead")
+
+    # -- fig20 observability-overhead gate (within-file) -------------------
+    SMP, UNT = "fig20.put4k_sampled", "fig20.put4k_untraced"
+    if args.obs_overhead_max_ratio > 0 and SMP in new and UNT in new:
+        s99, u99 = float(new[SMP]["p99"]), float(new[UNT]["p99"])
+        ratio = s99 / u99
+        flag = (" REGRESSION"
+                if ratio > args.obs_overhead_max_ratio else "")
+        print(f"  fig20 obs overhead: p99 {s99:.2f}us sampled vs "
+              f"{u99:.2f}us untraced = {ratio:.3f}x (max "
+              f"{args.obs_overhead_max_ratio}x){flag}")
+        if flag:
+            regressed.append("fig20.obs_overhead")
 
     # -- fig19 partition-tolerance gates (within-file) ---------------------
     fig19 = {n: r for n, r in new.items() if n.startswith("fig19.")}

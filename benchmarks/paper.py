@@ -9,11 +9,9 @@ import shutil
 
 import numpy as np
 
-from benchmarks.common import (pct, row, tail_stats, time_each_us, time_us,
-                               tmpdir)
+from benchmarks.common import (modeled_us, pct, row, tail_stats,
+                               time_each_us, time_us, tmpdir)
 from repro.core import AssiseCluster
-from repro.core.transport import (NET_BW_BPS, NET_LAT_READ_S,
-                                  NET_LAT_WRITE_S)
 from repro.fs import DisaggregatedCluster, NoCacheCluster
 
 
@@ -41,7 +39,7 @@ def bench_tiers():
     remote = c.sharedfs["node1"]
     row("table1.l3_replica_read",
         time_us(lambda: remote.read_any("/t/hot"), 500),
-        f"+modeled RDMA {1e6 * (NET_LAT_WRITE_S + 4096 / NET_BW_BPS):.1f}us")
+        f"+modeled RDMA {modeled_us(bytes_sent=4096, rpcs=1):.1f}us")
     row("table1.log_append_4k",
         time_us(lambda: ls.put("/t/hot", val), 2000), "NVM-log write")
     row("table1.log_append_4k_persist",
@@ -67,7 +65,7 @@ def bench_write_latency():
                 i[0] += 1
 
             t = time_us(op, 200)
-            wire = (nrep - 1) * (NET_LAT_WRITE_S + io / NET_BW_BPS) * 1e6
+            wire = modeled_us(bytes_sent=(nrep - 1) * io, rpcs=nrep - 1)
             row(f"fig2a.assise_{tag}_write+fsync_{io}B", t,
                 f"modeled_wire={wire:.1f}us")
             c.destroy()
@@ -82,14 +80,14 @@ def bench_write_latency():
 
         t = time_us(dop, 200)
         blocks = max(1, -(-io // 4096)) * 4096
-        wire = 2 * (NET_LAT_WRITE_S + blocks / NET_BW_BPS) * 1e6
+        wire = modeled_us(bytes_sent=2 * blocks, rpcs=2)
         row(f"fig2a.disagg_write+fsync_{io}B", t,
             f"modeled_wire={wire:.1f}us(block-amplified)")
         o = NoCacheCluster(tmpdir("wlo"))
         oc = o.open_client("p")
         t = time_us(lambda: oc.put("/w/x", val), 200)
         row(f"fig2a.nocache_write_{io}B", t,
-            f"modeled_wire={(NET_LAT_WRITE_S + io / NET_BW_BPS) * 1e6:.1f}us")
+            f"modeled_wire={modeled_us(bytes_sent=io, rpcs=1):.1f}us")
         # extent path: the same IO size as a byte-range write into a
         # 1MB object (only the range is logged + chain-replicated)
         c = _assise("wlx", n_nodes=3, replication=2)
@@ -104,7 +102,7 @@ def bench_write_latency():
             k[0] += 1
 
         t = time_us(xop, 200)
-        wire = (NET_LAT_WRITE_S + io / NET_BW_BPS) * 1e6
+        wire = modeled_us(bytes_sent=io, rpcs=1)
         row(f"fig2a.assise_2r_write-range+fsync_{io}B", t,
             f"modeled_wire={wire:.1f}us (1MB object)")
         c.destroy()
@@ -130,7 +128,7 @@ def bench_read_latency():
     row("fig2b.assise_MISS", time_us(miss, 300), "SharedFS hot area")
     remote = c.sharedfs["node1"]
     row("fig2b.assise_RMT", time_us(lambda: remote.read_any("/r/2"), 300),
-        f"+modeled {1e6 * (NET_LAT_WRITE_S + 16384 / NET_BW_BPS):.1f}us")
+        f"+modeled {modeled_us(bytes_sent=16384, rpcs=1):.1f}us")
     d = DisaggregatedCluster(tmpdir("rld"))
     dc = d.open_client("p")
     dc.put("/r/0", val)
@@ -142,7 +140,7 @@ def bench_read_latency():
         dc.crash()
         dc.get("/r/0")
 
-    wire = (2 * NET_LAT_WRITE_S + 16384 / NET_BW_BPS) * 1e6
+    wire = modeled_us(bytes_sent=16384, rpcs=2)
     row("fig2b.disagg_miss", time_us(dmiss, 200),
         f"refetch from server; modeled_wire={wire:.1f}us")
     c.destroy()
@@ -253,7 +251,7 @@ def bench_reserve():
         n_cold = sum(1 for i in range(192)
                      if sfs.cold.contains(f"/cold/{i}"))
         lat = []
-        model_us = (SSD_LAT + size / SSD_BW) * 1e6 if n_res == 0 else             (NET_LAT_WRITE_S + size / NET_BW_BPS) * 1e6
+        model_us = (SSD_LAT + size / SSD_BW) * 1e6 if n_res == 0 else             modeled_us(bytes_sent=size, rpcs=1)
         for i in np.random.default_rng(2).permutation(192):
             ls.dram.clear()
             m = time_each_us(lambda i=i: ls.get(f"/cold/{int(i)}"), 1)[0]
@@ -385,7 +383,7 @@ def bench_failover():
     dc.crash()  # volatile cache rebuild == the Ceph 23.7s story
     for i in range(500):
         assert dc.get(f"/db/{i}")[:1024] == val
-    wire = 500 * (2 * NET_LAT_WRITE_S + 4096 / NET_BW_BPS) * 1e6
+    wire = modeled_us(bytes_sent=500 * 4096, rpcs=2 * 500)
     row("fig7.disagg_cache_rebuild", (T.perf_counter() - t0) * 1e6,
         f"refetch everything; modeled_wire={wire:.0f}us")
     # process failover (kill only the process)
@@ -751,7 +749,7 @@ def bench_read_tiers():
     row("fig14.remote_one_sided_range_4k",
         time_us(lambda: r.get_range("/rt/obj", 8192, 4096), 500),
         f"locate+one-sided; modeled "
-        f"{1e6 * (NET_LAT_WRITE_S + NET_LAT_READ_S + 4096 / NET_BW_BPS):.1f}us")
+        f"{modeled_us(bytes_sent=4096, rpcs=1, one_sided_reads=1):.1f}us")
 
     # -- (b) wire bytes: one-sided vs whole-blob RPC --------------------
     for io in (128, 1024, 4096):
@@ -804,7 +802,7 @@ def bench_read_tiers():
     seq_rpcs = tr.rpcs - rpc0
     # the win is round-trips, priced by the modeled RPC latency (the
     # in-process python cost of an RPC is noise)
-    saved = (seq_rpcs - mget_rpcs) * NET_LAT_WRITE_S * 1e6 / N
+    saved = modeled_us(rpcs=seq_rpcs - mget_rpcs) / N
     row(f"fig14.multiget_{N}cold", t_mget,
         f"locate_rpcs/peer<=ceil({N}/{batch})={-(-N // batch)} "
         f"(got {worst}); {mget_rpcs} locate RPCs total")
@@ -970,7 +968,7 @@ def bench_failover_scale():
         for i in range(n):
             assert dc.get(f"/db/{i}")[:4096] == val
         disagg_t[n] = T.perf_counter() - t0
-        wire = n * (2 * NET_LAT_WRITE_S + 4096 / NET_BW_BPS) * 1e6
+        wire = modeled_us(bytes_sent=n * 4096, rpcs=2 * n)
         row(f"fig15.disagg_restart_{n}keys", disagg_t[n] * 1e6,
             f"refetch all; modeled_wire={wire:.0f}us")
 
@@ -1245,7 +1243,7 @@ def bench_integrity():
     #   blocks: an OS stall inflates the same block index in both modes
     #   and the median drops it, so it cannot masquerade as
     #   verification overhead.
-    wire_us = (NET_LAT_WRITE_S + NET_LAT_READ_S + 4096 / NET_BW_BPS) * 1e6
+    wire_us = modeled_us(bytes_sent=4096, rpcs=1, one_sided_reads=1)
     lv, lu = [], []
     gc_was = gc.isenabled()
     gc.disable()  # collector pauses would dominate the p99 being gated

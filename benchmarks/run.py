@@ -16,8 +16,8 @@ def main() -> None:
                          "across PRs; benchmarks/compare.py diffs "
                          "successive dumps in CI)")
     args = ap.parse_args()
-    from benchmarks import common, paper, train_ckpt
-    benches = paper.ALL + train_ckpt.ALL
+    from benchmarks import bench_obs_overhead, common, paper, train_ckpt
+    benches = paper.ALL + train_ckpt.ALL + bench_obs_overhead.ALL
     print("name,us_per_call,derived")
     failed = 0
     for b in benches:

@@ -13,6 +13,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core.obs import MetricsRegistry
+
 HEARTBEAT_TIMEOUT = 1.0  # paper: 1s heartbeat
 MANAGER_TTL = 5.0  # paper: lease management expires every 5s
 
@@ -48,6 +50,7 @@ class ClusterManager:
         self._dirty_suffix_cache: Dict[int, set] = {}
         self.clock = clock
         self.journal_path = journal_path
+        self.metrics = MetricsRegistry("cm")
         self._watchers = []
         if journal_path and os.path.exists(journal_path):
             self._recover()
@@ -112,6 +115,7 @@ class ClusterManager:
         info = self.nodes.get(node_id)
         if info:
             info.last_heartbeat = self.clock()
+        self.metrics.inc("cm.heartbeats")
         return self.epoch
 
     def check_heartbeats(self,
@@ -140,6 +144,7 @@ class ClusterManager:
     # -- epochs (paper §3.4) -----------------------------------------------------
     def bump_epoch(self) -> int:
         self.epoch += 1
+        self.metrics.inc("cm.epoch_bumps")
         self.epoch_dirty[self.epoch] = set()
         # the just-closed epoch's set is frozen now: cached suffix
         # unions built before the bump would miss it
@@ -206,6 +211,7 @@ class ClusterManager:
         fresh = [n for n in node_ids if n not in self._failed_handled]
         if not fresh:
             return
+        self.metrics.inc("cm.node_failures", len(fresh))
         dead = set(fresh)
         for nid in fresh:
             self._failed_handled.add(nid)
@@ -258,6 +264,7 @@ class ClusterManager:
         if not cand:
             return None
         recruit = cand[0]
+        self.metrics.inc("cm.recruits")
         chain.append(recruit)
         self._journal({"t": "chain", "subtree": subtree, "chain": chain,
                        "reserve": self.reserves.get(subtree, [])})
@@ -271,6 +278,7 @@ class ClusterManager:
         observes this epoch (e.g. after a partition heals) must fence
         itself instead of resuming writes beside its successor."""
         self.promotions[proc_id] = self.epoch
+        self.metrics.inc("cm.promotions")
         self._journal({"t": "promo", "proc": proc_id, "epoch": self.epoch})
 
     def on_node_recovered(self, node_id: str) -> None:

@@ -282,9 +282,9 @@ class GroupSlotSink:
 
 
 class _CommitReq:
-    __slots__ = ("ls", "coalesce", "done", "error")
+    __slots__ = ("ls", "coalesce", "done", "error", "ctx")
 
-    def __init__(self, ls, coalesce: bool):
+    def __init__(self, ls, coalesce: bool, ctx=None):
         self.ls = ls
         self.coalesce = coalesce
         # per-request event, NOT the coordinator cv: a writer waits on
@@ -292,6 +292,10 @@ class _CommitReq:
         # blocked writer awake just to re-check and re-sleep
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
+        # the committing op's trace context, captured writer-side: the
+        # flusher/committer threads annotate batch and ack spans into
+        # it (the in-process analogue of the _trace RPC header)
+        self.ctx = ctx
 
 
 class GroupCommitCoordinator:
@@ -343,8 +347,11 @@ class GroupCommitCoordinator:
         # spawn would eat the overlap in scheduling latency)
         self._jq: "queue.Queue" = queue.Queue()
         self._jthread: Optional[threading.Thread] = None
-        self.stats = {"commits": 0, "batches": 0, "batched_members": 0,
-                      "max_batch_seen": 0}
+        # counters live in the node's metrics registry (node.metrics)
+        # under the gc. prefix; the view keeps the legacy dict API
+        self.stats = sharedfs.metrics.scoped(
+            "gc.", seed=("commits", "batches", "batched_members",
+                         "max_batch_seen"))
 
     # -- writer entry point -------------------------------------------------
     def commit(self, ls, coalesce: bool = False) -> None:
@@ -355,7 +362,10 @@ class GroupCommitCoordinator:
         a writer into serving everyone else: the leader could only
         return once the queue drained, which under steady concurrency
         is never, so the first writer stopped doing its own work.)"""
-        req = _CommitReq(ls, coalesce)
+        tracer = getattr(self.sfs.transport, "tracer", None)
+        req = _CommitReq(ls, coalesce,
+                         ctx=tracer.current() if tracer is not None
+                         else None)
         with self._cv:
             if self._flusher is None or not self._flusher.is_alive():
                 self._stopped = False
@@ -464,6 +474,10 @@ class GroupCommitCoordinator:
             self.stats["batched_members"] += len(members)
             self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"],
                                                len(members))
+        for r in members:
+            if r.ctx is not None:
+                r.ctx.annotate("gc.batch", node=self.sfs.node_id,
+                               members=len(members))
         plan = []  # (req, chain tuple, since, last, data)
         held = []
         try:
@@ -613,11 +627,22 @@ class GroupCommitCoordinator:
             return tr.rpc(head, "group_continue", wnode, items, rest,
                           _epoch=ep)
 
-        with tr.act_as(wnode):
-            acks = with_retries(_attempt, stats=tr.stats)
+        # the batch shares one wire ship: its spans attach to the first
+        # traced member's context (the others still get batch/ack spans)
+        tracer = getattr(tr, "tracer", None)
+        ctxs = [p[0].ctx for p in grp if p[0].ctx is not None]
+        tok = tracer.push(ctxs[0]) if tracer is not None and ctxs else None
+        try:
+            with tr.act_as(wnode):
+                acks = with_retries(_attempt, stats=tr.stats)
+        finally:
+            if tracer is not None and ctxs:
+                tracer.pop(tok)
         for (r, _c, _s, last, _d), ack in zip(grp, acks):
             assert ack >= last, (ack, last)
             r.ls.chain.mark_acked(last)
+            if r.ctx is not None:
+                r.ctx.annotate("repl.ack", node=wnode, seqno=last)
 
     def close(self) -> None:
         with self._cv:

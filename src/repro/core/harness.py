@@ -21,6 +21,7 @@ from typing import Dict, List, Optional
 
 from repro.core.cluster import ClusterManager
 from repro.core.faults import BitRot, FaultInjector
+from repro.core.obs import Tracer
 from repro.core.sharedfs import SharedFS
 from repro.core.store import LibState, recover_process
 from repro.core.transport import Transport, with_retries
@@ -37,7 +38,8 @@ class AssiseCluster:
                  digest_workers: int = 1, digest_shards: int = 1,
                  min_replicas: int = 1, degraded_writes: bool = True,
                  auto_rereplicate: bool = False,
-                 repl_deadline_s: Optional[float] = None):
+                 repl_deadline_s: Optional[float] = None,
+                 trace_sampling: float = 1 / 64):
         assert replication + n_reserve <= n_nodes
         self.root = root_dir
         self.mode = mode
@@ -58,6 +60,11 @@ class AssiseCluster:
         self.repl_deadline_s = repl_deadline_s
         os.makedirs(root_dir, exist_ok=True)
         self.transport = Transport()
+        # op-granular tracing (DESIGN.md §5.5): the tracer ticks on the
+        # cluster clock so span timestamps line up with sim time;
+        # sampling=0 disables, 1.0 traces every op (tests)
+        self.transport.tracer = Tracer(clock=clock,
+                                       sampling=trace_sampling)
         self.cm = ClusterManager(os.path.join(root_dir, "cm.journal"),
                                  clock=clock)
         # the manager is reachable only over the transport ("cm"
@@ -231,6 +238,7 @@ class AssiseCluster:
         The node's digest worker dies with it — queued sealed-region
         jobs are abandoned, not run (a dead node must not keep
         digesting into the cluster)."""
+        self.sharedfs[node_id].recorder.record("kill", node_id)
         self.dead_nodes.add(node_id)
         self.transport.set_down(node_id)
         for pid, ls in list(self.procs.items()):
@@ -317,6 +325,21 @@ class AssiseCluster:
         chain = self.cm.chain_for(subtree + "/x") + reserves
         target = next(n for n in chain if n not in self.dead_nodes)
         sfs = self.sharedfs[target]
+        # fail-overs are rare: always trace them (not sampled)
+        tracer = self.transport.tracer
+        ctx = tracer.start("op.failover", target)
+        ctx.annotate("failover.target", node=target, proc=proc_id)
+        tok = tracer.push(ctx)
+        try:
+            ls = self._failover_process(proc_id, subtree, fast, chain,
+                                        reserves, target, sfs, ctx)
+        finally:
+            tracer.pop(tok)
+        self.procs[proc_id] = ls
+        return ls
+
+    def _failover_process(self, proc_id, subtree, fast, chain, reserves,
+                          target, sfs, ctx) -> LibState:
         if fast:
             survivors = [n for n in chain
                          if n != target and n not in self.dead_nodes]
@@ -352,6 +375,8 @@ class AssiseCluster:
             # incarnation that later observes this epoch must fail-stop
             # rather than dual-write (see LibState._check_epoch)
             self.cm.record_promotion(proc_id)
+            ctx.annotate("failover.lease_migrate", node=target,
+                         proc=proc_id)
             ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
                           subtree=subtree, fsync_data=self.fsync_data,
                           start_seqno=acked, settle_before_digest=True,
@@ -361,6 +386,8 @@ class AssiseCluster:
         else:
             sfs.recover_dead_process(proc_id)
             self.cm.record_promotion(proc_id)
+            ctx.annotate("failover.lease_migrate", node=target,
+                         proc=proc_id)
             acked = sfs.slot_acked(proc_id)
             ls = LibState(proc_id, sfs, chain, reserves, mode=self.mode,
                           subtree=subtree, fsync_data=self.fsync_data,
@@ -368,8 +395,28 @@ class AssiseCluster:
                           min_replicas=self.min_replicas,
                           degraded_writes=self.degraded_writes,
                           repl_deadline_s=self.repl_deadline_s)
-        self.procs[proc_id] = ls
         return ls
+
+    # -- observability accessors (DESIGN.md §5.5) -------------------------------
+    def set_trace_sampling(self, sampling: float) -> None:
+        self.transport.tracer.set_sampling(sampling)
+
+    def flight_recording(self, node_id: str, kind: Optional[str] = None):
+        """The node's flight-recorder ring, oldest first — readable
+        even after ``kill_node`` (the ring lives in the daemon object,
+        which survives for exactly this post-mortem)."""
+        return self.sharedfs[node_id].recorder.events(kind)
+
+    def metrics_dump(self) -> Dict[str, dict]:
+        """One JSON-able snapshot of every registry on the cluster:
+        per-node SharedFS registries (which the node's LibFS processes
+        and group-commit coordinator scope into), the transport's wire
+        registry, and the cluster manager's."""
+        out = {nid: sfs.metrics.to_dict()
+               for nid, sfs in self.sharedfs.items()}
+        out["transport"] = self.transport.metrics.to_dict()
+        out["cm"] = self.cm.metrics.to_dict()
+        return out
 
     def restart_node(self, node_id: str) -> SharedFS:
         """Rejoin after failure: rebuild SharedFS from its persistent

@@ -433,11 +433,14 @@ class ChainClient:
             self._cv.notify_all()
 
     # -- pipelined ship (sealed regions) ------------------------------------
-    def submit(self, last_seqno: int, data: bytes) -> None:
+    def submit(self, last_seqno: int, data: bytes, ctx=None) -> None:
         """Queue a pre-encoded slice ending at ``last_seqno`` for
         asynchronous shipping; returns once queued (bounded window).
         The caller must have computed ``data`` starting exactly at the
-        current ``submitted_seqno`` (slices must tile the stream)."""
+        current ``submitted_seqno`` (slices must tile the stream).
+        ``ctx`` is an optional trace context that rides the queue to the
+        sender thread, so the ship's wire spans land in the submitting
+        op's trace."""
         if not self.chain:
             self.mark_acked(last_seqno)
             return
@@ -446,7 +449,7 @@ class ChainClient:
                 self._cv.wait()
             if self._error is not None:
                 raise self._error
-            self._sendq.append((last_seqno, data))
+            self._sendq.append((last_seqno, data, ctx))
             self.submitted_seqno = max(self.submitted_seqno, last_seqno)
             self._stopped = False
             t = self._sender
@@ -465,7 +468,11 @@ class ChainClient:
                     self._cv.wait()
                 if not self._sendq:
                     return  # stopped and drained
-                last, data = self._sendq[0]
+                last, data, ctx = self._sendq[0]
+            # the queued slice carries its submitter's trace context:
+            # activate it so the ship's wire spans attach to that trace
+            tracer = getattr(self.transport, "tracer", None)
+            tok = tracer.push(ctx) if tracer is not None else None
             try:
                 self._ship(last, data)
             except BaseException as e:  # parked: surfaces at next wait
@@ -474,6 +481,9 @@ class ChainClient:
                     self._sendq.clear()
                     self._cv.notify_all()
                 return
+            finally:
+                if tracer is not None:
+                    tracer.pop(tok)
             with self._cv:
                 if self._sendq and self._sendq[0][0] == last:
                     self._sendq.popleft()

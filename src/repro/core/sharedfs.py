@@ -25,6 +25,7 @@ from repro.core.groupcommit import (GroupCommitCoordinator, GroupSlotSink,
                                     frame_batch)
 from repro.core.integrity import poison_sum, range_sum
 from repro.core.leases import LeaseManager, READ, WRITE
+from repro.core.obs import FlightRecorder, MetricsRegistry
 from repro.core.replication import ReplicaSlot
 from repro.core.segstore import (SegmentStore, ShardedSegmentStore,
                                  subtree_shard)
@@ -46,6 +47,14 @@ class SharedFS:
         self.root = root_dir
         self.cluster = cluster
         self.transport = transport
+        # per-node observability (DESIGN.md §5.5): one registry every
+        # subsystem on this node scopes into, plus the crash-surviving
+        # flight recorder (registered with the transport so fault
+        # injections and crash points land in it)
+        self.metrics = MetricsRegistry(node_id)
+        self.recorder = FlightRecorder(node_id, clock=cluster.clock)
+        if hasattr(transport, "recorders"):
+            transport.recorders[node_id] = self.recorder
         self.is_reserve = is_reserve
         self.fsync_data = fsync_data
         area_name = "reserve" if is_reserve else "shared"
@@ -79,14 +88,14 @@ class SharedFS:
         # steady state pays zero manager RPCs; the short TTL bounds how
         # long a partitioned node keeps trusting a stale delegation
         self._mgr_cache: Dict[str, tuple] = {}
-        self.stats = {"digests": 0, "evictions": 0, "remote_reads": 0,
-                      "remote_locates": 0, "invalidated": 0, "bg_jobs": 0,
-                      "promotions": 0,
-                      # integrity subsystem (DESIGN.md §5.3)
-                      "repairs": 0, "repair_failures": 0,
-                      "checksum_exchanges": 0, "scrub_passes": 0,
-                      "scrub_paths": 0, "scrub_errors": 0,
-                      "scrub_repairs": 0, "scrub_disagreements": 0}
+        self.stats = self.metrics.scoped(
+            "sharedfs.",
+            seed=("digests", "evictions", "remote_reads", "remote_locates",
+                  "invalidated", "bg_jobs", "promotions",
+                  # integrity subsystem (DESIGN.md §5.3)
+                  "repairs", "repair_failures", "checksum_exchanges",
+                  "scrub_passes", "scrub_paths", "scrub_errors",
+                  "scrub_repairs", "scrub_disagreements"))
         # background scrub daemon state (start_scrub/stop_scrub)
         self._scrub_thread: Optional[threading.Thread] = None
         self._scrub_stop: Optional[threading.Event] = None
@@ -154,6 +163,7 @@ class SharedFS:
             self.view_epoch = epoch
             self.lease_mgr.drop_stale(epoch)
             self._mgr_cache.clear()
+            self.recorder.record("epoch", str(epoch))
         return self.view_epoch
 
     def _rpc(self, dst: str, method: str, *args, deadline_s=None,
@@ -171,6 +181,15 @@ class SharedFS:
 
         return with_retries(_attempt, stats=tr.stats, attempts=attempts,
                             deadline_s=deadline_s)
+
+    def _span(self, name: str, **meta) -> None:
+        """Annotate the thread's active trace (no-op when untraced)."""
+        tracer = getattr(self.transport, "tracer", None)
+        if tracer is None:
+            return
+        ctx = tracer.current()
+        if ctx is not None:
+            ctx.annotate(name, node=self.node_id, **meta)
 
     # -- permissions (single administrative domain, paper §3.2) -------------
     def set_permission(self, prefix: str, read: bool = True,
@@ -407,6 +426,9 @@ class SharedFS:
             # areas — a crash in between must never lose the digested range
             slot.truncate_through(through_seqno)
             self.stats["digests"] += 1
+            self.recorder.record("digest", f"slot:{proc_id}@{through_seqno}")
+            self._span("digest.apply", proc=proc_id, upto=through_seqno,
+                       applied=len(batch))
             return len(batch)
 
     def digest_slot_chain(self, proc_id: str, through_seqno: int,
@@ -431,6 +453,8 @@ class SharedFS:
             self.stats["digests"] += 1
             self._evict_if_needed()
             self._commit_areas()
+        self.recorder.record("digest", f"entries:{len(entries)}")
+        self._span("digest.apply", applied=len(entries))
         return len(entries)
 
     def _commit_areas(self) -> None:
@@ -808,6 +832,9 @@ class SharedFS:
                     self.stats["repair_failures"] += 1
         with self._commit_lock:
             self._commit_areas()
+        if repaired:
+            self.recorder.record("repair", path)
+        self._span("repair", path=path, ok=repaired)
         return repaired
 
     def scrub_path(self, path: str) -> bool:
@@ -1049,26 +1076,25 @@ class SharedFS:
         slot = self.slots.get(proc_id)
         acked = slot.acked_seqno if slot is not None else 0
         others = [n for n in peers if n != self.node_id]
+        self.recorder.record("promote", f"{proc_id}@{acked}")
+        self._span("failover.promote", proc=proc_id, acked=acked)
+        tracer = getattr(self.transport, "tracer", None)
+        ctx = tracer.current() if tracer is not None else None
         if slot is not None and (slot.entries or others):
             data = slot.suffix_bytes(slot.digested_seqno)
 
             def _replay():
-                for nid in others:
-                    try:
-                        self._rpc(nid, "ensure_slot", proc_id,
-                                  fenced=True)
-                        if data:
-                            self._rpc(nid, "chain_continue", proc_id,
-                                      data, [], fenced=True)
-                    except Exception:
-                        pass  # dead peer: chain repair handles it
-                self.digest_slot(proc_id, acked)
-                for nid in others:
-                    try:
-                        self._rpc(nid, "digest_slot", proc_id, acked,
-                                  fenced=True)
-                    except Exception:
-                        pass  # dead peer: chain repair handles it
+                # re-activate the fail-over trace on the digest worker
+                # so the background replay's spans join it
+                tok = tracer.push(ctx) if tracer is not None else None
+                if ctx is not None:
+                    ctx.annotate("failover.replay", node=self.node_id,
+                                 proc=proc_id, nbytes=len(data))
+                try:
+                    self._do_replay(proc_id, acked, others, data)
+                finally:
+                    if tracer is not None:
+                        tracer.pop(tok)
 
             # keyed by proc: FIFO with any digest the successor seals
             # for the same process afterwards (the ordering the fast-
@@ -1076,6 +1102,25 @@ class SharedFS:
             self.submit_digest(_replay, key=proc_id)
         self.stats["promotions"] += 1
         return acked
+
+    def _do_replay(self, proc_id: str, acked: int, others: List[str],
+                   data: bytes) -> None:
+        """Body of the promotion replay (see ``promote_dead_process``)."""
+        for nid in others:
+            try:
+                self._rpc(nid, "ensure_slot", proc_id, fenced=True)
+                if data:
+                    self._rpc(nid, "chain_continue", proc_id, data, [],
+                              fenced=True)
+            except Exception:
+                pass  # dead peer: chain repair handles it
+        self.digest_slot(proc_id, acked)
+        for nid in others:
+            try:
+                self._rpc(nid, "digest_slot", proc_id, acked,
+                          fenced=True)
+            except Exception:
+                pass  # dead peer: chain repair handles it
 
     def recover_dead_process(self, proc_id: str) -> int:
         """Idempotent log-based eviction of a dead process's updates.

@@ -185,13 +185,16 @@ class _DigestJob:
     digest) sleeps on ``cv`` and is woken by ``finish`` from the digest
     worker — no sleep/poll loop anywhere on the wait path."""
 
-    __slots__ = ("region", "cv", "done", "error")
+    __slots__ = ("region", "cv", "done", "error", "ctx")
 
-    def __init__(self, region: SealedRegion):
+    def __init__(self, region: SealedRegion, ctx=None):
         self.region = region
         self.cv = threading.Condition()
         self.done = False
         self.error: Optional[BaseException] = None
+        # trace context riding the writer->digest-worker thread handoff
+        # (the in-process analogue of copying the _trace RPC header)
+        self.ctx = ctx
 
     def finish(self, error: Optional[BaseException] = None) -> None:
         with self.cv:
@@ -304,16 +307,23 @@ class LibState:
         # lease cache: lease_path -> (mode, expires_at); consulted per
         # op, dropped on revocation/expiry (paper §3.3)
         self._lease_cache: Dict[str, Tuple[str, float]] = {}
-        self.stats = {"puts": 0, "range_writes": 0, "gets": 0,
-                      "l1_hits": 0, "l2_hits": 0, "remote_hits": 0,
-                      "neg_hits": 0, "stale_handles": 0, "multigets": 0,
-                      "digests": 0, "inline_digests": 0, "bg_digests": 0,
-                      "seals": 0, "backpressure_waits": 0,
-                      "seal_deferrals": 0,
-                      "coalesced_out": 0, "lease_cache_hits": 0,
-                      "lease_acquires": 0,
-                      "verified_reads": 0, "corrupt_extents": 0,
-                      "degraded_acks": 0, "replica_waits": 0}
+        # per-process counters live in the NODE's metrics registry
+        # (``node.metrics``) under a proc-scoped prefix; this mapping
+        # view keeps the legacy dict API at every increment site
+        self.metrics = sharedfs.metrics
+        self.tracer = sharedfs.transport.tracer
+        self._optrace = None  # pending write trace: put..fsync..digest
+        self.stats = self.metrics.scoped(
+            f"proc.{proc_id}.",
+            seed=("puts", "range_writes", "gets",
+                  "l1_hits", "l2_hits", "remote_hits",
+                  "neg_hits", "stale_handles", "multigets",
+                  "digests", "inline_digests", "bg_digests",
+                  "seals", "backpressure_waits", "seal_deferrals",
+                  "coalesced_out", "lease_cache_hits", "lease_acquires",
+                  "verified_reads", "corrupt_extents",
+                  "degraded_acks", "replica_waits",
+                  "epoch_invalidations"))
 
     # -- epoch migration (paper §3.4: leases migrate via the epoch bump) ------
     def _check_epoch(self) -> None:
@@ -344,6 +354,10 @@ class LibState:
             self._fence(f"superseded: successor promoted at epoch "
                         f"{promo} (this incarnation started at "
                         f"{self._start_epoch})")
+        # membership changed: caches are *invalidated*, and the bump is
+        # counted — hit/miss denominators are never zeroed, so hit-rate
+        # math stays honest across epoch changes
+        self.stats["epoch_invalidations"] += 1
         self._lease_cache.clear()
         self._neg.clear()
         self.dram.clear()
@@ -418,27 +432,67 @@ class LibState:
             del self._neg[p]
         self.flush_for_revocation()
 
+    # -- tracing ----------------------------------------------------------------
+    def _trace_write(self):
+        """Sampling decision for the write path. One trace covers the
+        whole durability lifecycle of an op: put (append) → fsync
+        (replication + ack) → the digest that moves it below the log.
+        The later stages attach via the stashed context even when they
+        run on coordinator/worker threads; a new trace starts at the
+        first append after the previous one acked."""
+        tr = self.tracer
+        if tr is None:
+            return None
+        ctx = self._optrace
+        if ctx is None or ctx.acked:
+            ctx = tr.maybe_trace("op.put", self.sfs.node_id)
+            self._optrace = ctx
+        return ctx
+
+    def _span(self, name: str, **meta) -> None:
+        """Annotate the currently-active trace, if any."""
+        tr = self.tracer
+        if tr is None:
+            return
+        ctx = tr.current()
+        if ctx is not None:
+            ctx.annotate(name, node=self.sfs.node_id, **meta)
+
     # -- write path -------------------------------------------------------------
     def put(self, path: str, data: bytes) -> None:
+        t0 = time.perf_counter()
         self._lease(path, WRITE)
+        ctx = self._trace_write()
         self.log.append(L.OP_PUT, path, data)
         self.stats["puts"] += 1
+        if ctx is not None:
+            ctx.annotate("append", node=self.sfs.node_id, path=path,
+                         nbytes=len(data))
         self.dram.invalidate(path)
         self._neg.pop(path, None)
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
             self._threshold_digest()
+        self.metrics.observe("op.put.us",
+                             (time.perf_counter() - t0) * 1e6)
 
     def write(self, path: str, data: bytes, offset: int = 0) -> None:
         """Byte-range write (paper §3: IO-operation granularity). Logs,
         replicates, and digests only ``len(data)`` bytes, wherever they
         land inside the object; gaps past the old end read as zeros."""
+        t0 = time.perf_counter()
         self._lease(path, WRITE)
+        ctx = self._trace_write()
         self.log.append(L.OP_WRITE, path, data, offset)
         self.stats["range_writes"] += 1
+        if ctx is not None:
+            ctx.annotate("append", node=self.sfs.node_id, path=path,
+                         nbytes=len(data), offset=offset)
         self.dram.invalidate(path)
         self._neg.pop(path, None)
         if self.log.bytes >= self.digest_threshold * self.log.capacity:
             self._threshold_digest()
+        self.metrics.observe("op.write.us",
+                             (time.perf_counter() - t0) * 1e6)
 
     def _threshold_digest(self) -> None:
         if not self.pipeline_digests:
@@ -512,7 +566,11 @@ class LibState:
             f" < min_replicas={self.min_replicas}) after {waited:.2f}s")
 
     def fsync(self) -> None:
+        t0 = time.perf_counter()
         self._check_epoch()
+        tr = self.tracer
+        ctx = self._optrace if tr is not None else None
+        tok = tr.push(ctx) if tr is not None else None
         try:
             if self.mode == "pessimistic":
                 self._require_replicas()
@@ -524,28 +582,48 @@ class LibState:
                     # committing process — this writer's per-op fsync is
                     # amortized away
                     gc.commit(self, coalesce=False)
-                    return
+                else:
+                    self.log.persist()
+                    with self._repl_lock:
+                        self._replicate(coalesce=False)
+            else:
                 self.log.persist()
-                with self._repl_lock:
-                    self._replicate(coalesce=False)
-                return
-            self.log.persist()
+            if ctx is not None:
+                ctx.annotate("ack", node=self.sfs.node_id)
+                ctx.acked = True
         except StaleEpoch as e:
             self._fence(f"stale epoch on replicate: {e}")
+        finally:
+            if tr is not None:
+                tr.pop(tok)
+            self.metrics.observe("op.fsync.us",
+                                 (time.perf_counter() - t0) * 1e6)
 
     def dsync(self) -> None:
+        t0 = time.perf_counter()
         self._check_epoch()
+        tr = self.tracer
+        ctx = self._optrace if tr is not None else None
+        tok = tr.push(ctx) if tr is not None else None
         try:
             self._require_replicas()
             gc = getattr(self.sfs, "group_commit", None)
             if gc is not None and self._group_commit:
                 gc.commit(self, coalesce=(self.mode == "optimistic"))
-                return
-            self.log.persist()
-            with self._repl_lock:
-                self._replicate(coalesce=(self.mode == "optimistic"))
+            else:
+                self.log.persist()
+                with self._repl_lock:
+                    self._replicate(coalesce=(self.mode == "optimistic"))
+            if ctx is not None:
+                ctx.annotate("ack", node=self.sfs.node_id)
+                ctx.acked = True
         except StaleEpoch as e:
             self._fence(f"stale epoch on replicate: {e}")
+        finally:
+            if tr is not None:
+                tr.pop(tok)
+            self.metrics.observe("op.dsync.us",
+                                 (time.perf_counter() - t0) * 1e6)
 
     def _replicate(self, coalesce: bool) -> None:
         """Replicate everything past the chain's watermark — spanning a
@@ -572,15 +650,29 @@ class LibState:
     def get(self, path: str) -> Optional[bytes]:
         self._lease(path, READ)
         self.stats["gets"] += 1
-        v = self.log.index.get(path, self._MISS)  # L1a: log hashtable
-        if v is not self._MISS:
-            self.stats["l1_hits"] += 1
-            return self._from_log_value(path, v)
-        v = self.dram.get(path)  # L1b: process DRAM read cache
-        if v is not None:
-            self.stats["l1_hits"] += 1
-            return v
-        return self._read_below(path)
+        tr = self.tracer
+        ctx = (tr.maybe_trace("op.get", self.sfs.node_id)
+               if tr is not None else None)
+        tok = tr.push(ctx) if ctx is not None else None
+        try:
+            v = self.log.index.get(path, self._MISS)  # L1a: log hashtable
+            if v is not self._MISS:
+                self.stats["l1_hits"] += 1
+                if ctx is not None:
+                    ctx.annotate("tier", node=self.sfs.node_id,
+                                 tier="l1.log")
+                return self._from_log_value(path, v)
+            v = self.dram.get(path)  # L1b: process DRAM read cache
+            if v is not None:
+                self.stats["l1_hits"] += 1
+                if ctx is not None:
+                    ctx.annotate("tier", node=self.sfs.node_id,
+                                 tier="l1.dram")
+                return v
+            return self._read_below(path)
+        finally:
+            if ctx is not None:
+                tr.pop(tok)
 
     def _from_log_value(self, path: str, v) -> Optional[bytes]:
         """Materialize a log-hashtable hit (caller counted the L1 hit)."""
@@ -656,9 +748,11 @@ class LibState:
                 # one-sided read and is the fig18 <=1.1x p99 hot path
                 if len(buf) != ext or zlib.adler32(buf, c0) != c1:
                     self.stats["corrupt_extents"] += 1
+                    self._span("verify", ok=False, peer=nid)
                     return self.transport.rpc(nid, "read_verified",
                                               path, offset, length)
                 self.stats["verified_reads"] += 1
+                self._span("verify", ok=True, peer=nid)
                 return True, bytes(buf[head:head + n])
             return True, self.transport.one_sided_read(nid, region, off,
                                                        n, rkey=rkey)
@@ -686,9 +780,11 @@ class LibState:
                 self.stats["l2_hits"] += 1
                 if fill_cache:
                     self.dram.put(path, v)
+            self._span("tier", tier="l2")
             return v
         if self._neg.get(path) == self.sfs.view_epoch:
             self.stats["neg_hits"] += 1
+            self._span("tier", tier="neg")
             return None
         for nid in self.read_peers:  # L3: remote replica NVM
             try:
@@ -700,7 +796,9 @@ class LibState:
                     self.stats["remote_hits"] += 1
                     if fill_cache:
                         self.dram.put(path, v)
+                self._span("tier", tier="remote", peer=nid)
                 return v
+        self._span("tier", tier="miss")
         self._neg[path] = self.sfs.view_epoch
         return None
 
@@ -887,10 +985,14 @@ class LibState:
         # writer dies after sealing, before the worker takes the region:
         # the sealed suffix exists only in this node's NVM log
         self.transport.crashpoint("seal.mid", self.sfs.node_id)
-        job = _DigestJob(region)
+        job = _DigestJob(region, ctx=self._optrace)
         self._inflight = job
         self.stats["seals"] += 1
         self.stats["digests"] += 1
+        self.sfs.recorder.record("seal", self.proc_id)
+        if job.ctx is not None:
+            job.ctx.annotate("seal", node=self.sfs.node_id,
+                             nbytes=region.nbytes)
         self.sfs.submit_digest(lambda: self._digest_region(job),
                                abort=lambda: self._abort_job(job),
                                key=self.proc_id)
@@ -914,7 +1016,12 @@ class LibState:
         the synchronous replicate (the coalesced batch has no contiguous
         file range and must land atomically under its TXN barrier)."""
         region = job.region
+        tr = self.tracer
+        tok = tr.push(job.ctx) if tr is not None else None
         try:
+            if job.ctx is not None:
+                job.ctx.annotate("digest.region", node=self.sfs.node_id,
+                                 upto=region.last_seqno)
             shipped = 0
             with self._repl_lock:
                 self.chain.wait_acked(self.chain.submitted_seqno)
@@ -930,7 +1037,8 @@ class LibState:
                     else:
                         shipped = pending[-1].seqno
                         self.chain.submit(shipped,
-                                          region.encoded_since(since))
+                                          region.encoded_since(since),
+                                          ctx=job.ctx)
             # the apply overlaps the in-flight chain ship (pipelining)
             self.sfs.digest_entries(region.entries)
             if shipped:
@@ -944,6 +1052,8 @@ class LibState:
         except BaseException as e:  # surfaced at the next drain point
             job.finish(e)
         finally:
+            if tr is not None:
+                tr.pop(tok)
             job.finish()
 
     def _reap(self, wait: bool) -> None:
@@ -974,6 +1084,13 @@ class LibState:
     # -- digest (synchronous: replicate + apply + truncate) ----------------------
     def digest(self) -> None:
         self._check_epoch()
+        tr = self.tracer
+        # inline digest runs on the caller thread: the pending write
+        # trace (if any) activates so replicate/apply/fan-out spans
+        # attach; when called from a revocation handler a reader's
+        # already-active context wins (push(None) is a no-op)
+        ctx = self._optrace if tr is not None else None
+        tok = tr.push(ctx) if tr is not None else None
         try:
             if self._settle_before_digest:
                 # fast promotion queued the predecessor's slot replay on
@@ -996,6 +1113,9 @@ class LibState:
             self.stats["inline_digests"] += 1
         except StaleEpoch as e:
             self._fence(f"stale epoch on digest: {e}")
+        finally:
+            if tr is not None:
+                tr.pop(tok)
 
     def flush_for_revocation(self) -> None:
         """Lease revocation grace: replicate + digest so the next holder

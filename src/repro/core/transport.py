@@ -28,7 +28,8 @@ import itertools
 import random
 import threading
 import time
-from dataclasses import dataclass, field
+
+from .obs import MetricsRegistry, Tracer
 
 
 class NodeDown(RuntimeError):
@@ -120,6 +121,19 @@ NET_LAT_WRITE_S = 8e-6
 NET_BW_BPS = 3.8e9
 
 
+def modeled_wire_s(*, bytes_sent: int = 0, rpcs: int = 0,
+                   one_sided_writes: int = 0,
+                   one_sided_reads: int = 0) -> float:
+    """Canonical modeled wire time: line-rate transfer plus a per-hop
+    latency charge (writes and RPCs pay the write latency, one-sided
+    reads the read latency). This is the ONE place the formula lives —
+    ``TransportStats.modeled_wire_s`` and ``benchmarks/common
+    .modeled_us`` both delegate here."""
+    return (bytes_sent / NET_BW_BPS
+            + (rpcs + one_sided_writes) * NET_LAT_WRITE_S
+            + one_sided_reads * NET_LAT_READ_S)
+
+
 def payload_bytes(x) -> int:
     """Wire payload bytes inside an RPC argument/return value (bytes
     nested one or two levels deep in tuples/lists count too — e.g. a
@@ -131,16 +145,23 @@ def payload_bytes(x) -> int:
     return 0
 
 
-@dataclass
 class TransportStats:
-    rpcs: int = 0
-    one_sided_writes: int = 0
-    one_sided_reads: int = 0
-    bytes_sent: int = 0
-    bytes_read: int = 0
-    rpc_resp_bytes: int = 0
-    retries: int = 0
-    per_node: dict = field(default_factory=dict)
+    """Wire accounting, backed by a :class:`MetricsRegistry` under the
+    ``wire.*`` counter namespace. The attribute API (``stats.rpcs``,
+    ``stats.retries += 1`` ...) is unchanged — the attributes are
+    properties over registry counters, so one JSON dump of the
+    registry sees everything the transport counted."""
+
+    _KEYS = ("rpcs", "one_sided_writes", "one_sided_reads", "bytes_sent",
+             "bytes_read", "rpc_resp_bytes", "retries",
+             "retrans_rpcs", "retrans_bytes")
+
+    def __init__(self, registry: MetricsRegistry = None):
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry("transport"))
+        for k in self._KEYS:
+            self.registry.counters.setdefault("wire." + k, 0)
+        self.per_node = {}
 
     def account(self, dst, nbytes, kind):
         e = self.per_node.setdefault(dst, {"rpcs": 0, "writes": 0,
@@ -166,10 +187,27 @@ class TransportStats:
         e["bytes"] += nbytes
 
     def modeled_wire_s(self) -> float:
-        return (self.bytes_sent / NET_BW_BPS
-                + self.rpcs * NET_LAT_WRITE_S
-                + self.one_sided_writes * NET_LAT_WRITE_S
-                + self.one_sided_reads * NET_LAT_READ_S)
+        return modeled_wire_s(bytes_sent=self.bytes_sent,
+                              rpcs=self.rpcs,
+                              one_sided_writes=self.one_sided_writes,
+                              one_sided_reads=self.one_sided_reads)
+
+
+def _wire_counter(key: str) -> property:
+    full = "wire." + key
+
+    def _get(self):
+        return self.registry.counters[full]
+
+    def _set(self, v):
+        self.registry.counters[full] = v
+
+    return property(_get, _set)
+
+
+for _k in TransportStats._KEYS:
+    setattr(TransportStats, _k, _wire_counter(_k))
+del _k
 
 
 class Transport:
@@ -188,7 +226,10 @@ class Transport:
         # and epoch headers need a sender identity, and worker threads
         # must self-identify at their entry points
         self._sender = threading.local()
-        self.stats = TransportStats()
+        self.metrics = MetricsRegistry("transport")
+        self.stats = TransportStats(self.metrics)
+        self.tracer = Tracer()     # harness re-installs with cluster clock
+        self.recorders = {}        # node_id -> FlightRecorder (see obs.py)
         self.injector = None       # optional FaultInjector (see faults.py)
         self.on_crash = None       # callback(node_id) for crash faults
 
@@ -207,6 +248,14 @@ class Transport:
         inj = self.injector
         if inj is None or not inj.should_crash(name, node_id):
             return
+        # black-box the crash BEFORE killing the node: the recorder of
+        # the victim must contain the crash point that killed it
+        rec = self.recorders.get(node_id) if self.recorders else None
+        if rec is not None:
+            rec.record("crash", name)
+        ctx = self.tracer.current() if self.tracer is not None else None
+        if ctx is not None:
+            ctx.annotate("crash." + name, node=node_id)
         cb = self.on_crash
         if cb is not None:
             cb(node_id)
@@ -329,29 +378,63 @@ class Transport:
                 observe(epoch)
 
     # -- RPC ---------------------------------------------------------------
+    def _account_rpc(self, dst: str, nbytes: int,
+                     retrans: bool = False) -> None:
+        """Single accounting point for an RPC request (64B header
+        model). Every *delivered* request is charged to the wire totals
+        exactly once; an injected duplicate delivery is a retransmission
+        — charged once more and tallied under ``retrans_*`` so
+        consumers can split unique traffic from retransmitted bytes. A
+        dropped request is charged nothing (the drop raises before
+        delivery), so a retried RPC accounts exactly once per delivery."""
+        self.stats.account(dst, nbytes + 64, "rpc")
+        if retrans:
+            self.stats.retrans_rpcs += 1
+            self.stats.retrans_bytes += nbytes + 64
+
     def rpc(self, dst: str, method: str, *args, **kwargs):
         self._check(dst)
         if self._blocked:
             self._check_link(dst, method)
         epoch = kwargs.pop("_epoch", None) if kwargs else None
+        trace = kwargs.pop("_trace", None) if kwargs else None
+        tracer = self.tracer
+        ctx = None
+        if tracer is not None:
+            # the _trace header names the trace explicitly (thread
+            # handoffs); otherwise the sender's active context rides
+            # along implicitly, exactly like _epoch piggybacking
+            ctx = (tracer.resolve(trace) if trace is not None
+                   else tracer.current())
+        rec = self.recorders.get(dst) if self.recorders else None
         inj = self.injector
         act = inj.rpc_action(dst, method) if inj is not None else None
+        if act is not None and rec is not None:
+            rec.record("fault", f"{act}:rpc:{method}")
         if act == "drop":
             raise RpcTimeout(f"rpc {method}@{dst} (injected drop)")
         ep = self._endpoints[dst]
         if epoch is not None:
             self._fence(ep, dst, method, epoch)
         nbytes = sum(payload_bytes(a) for a in args)
-        self.stats.account(dst, nbytes + 64, "rpc")  # 64B header model
+        self._account_rpc(dst, nbytes)
+        if rec is not None:
+            rec.record("rpc", method)
+        if ctx is not None:
+            ctx.annotate("rpc." + method, node=dst, nbytes=nbytes)
         prev = getattr(self._sender, "node", None)
         self._sender.node = dst  # handler-side forwards send as dst
+        tok = tracer.push(ctx) if ctx is not None else None
         try:
             result = getattr(ep, method)(*args, **kwargs)
             if act == "dup":
-                # retransmitted duplicate: the receiver sees the call twice
-                self.stats.account(dst, nbytes + 64, "rpc")
+                # retransmitted duplicate: the receiver sees the call
+                # twice and the request crosses the wire once more
+                self._account_rpc(dst, nbytes, retrans=True)
                 result = getattr(ep, method)(*args, **kwargs)
         finally:
+            if ctx is not None:
+                tracer.pop(tok)
             self._sender.node = prev
         resp = payload_bytes(result)
         if resp:
@@ -373,6 +456,10 @@ class Transport:
             raise KeyError(f"region {region_id} not registered on {dst}")
         inj = self.injector
         act = inj.write_action(dst, region_id) if inj is not None else None
+        if act is not None and self.recorders:
+            rec = self.recorders.get(dst)
+            if rec is not None:
+                rec.record("fault", f"{act}:write:{region_id}")
         if act == "drop":
             raise RpcTimeout(f"write {region_id}@{dst} (injected drop)")
         # an epoch-stamped one-sided write fences against the region
@@ -382,10 +469,16 @@ class Transport:
         if _epoch is not None:
             self._fence(self._endpoints.get(dst), dst, region_id, _epoch)
         self.stats.account(dst, len(data), "write")
+        if self.tracer is not None:
+            ctx = self.tracer.current()
+            if ctx is not None:
+                ctx.annotate("write." + region_id, node=dst,
+                             nbytes=len(data))
         sink.write(offset, data)
         if act == "dup":
             # duplicate delivery: receivers dedup by seqno (ReplicaSlot)
             self.stats.account(dst, len(data), "write")
+            self.stats.retrans_bytes += len(data)
             sink.write(offset, data)
 
     def one_sided_read(self, dst: str, region_id: str, offset: int,
@@ -407,6 +500,10 @@ class Transport:
             raise KeyError(f"region {region_id} not registered on {dst}")
         inj = self.injector
         act = inj.read_action(dst, region_id) if inj is not None else None
+        if act is not None and self.recorders:
+            rec = self.recorders.get(dst)
+            if rec is not None:
+                rec.record("fault", f"{act}:read:{region_id}")
         if act == "drop":
             raise RpcTimeout(f"read {region_id}@{dst} (injected drop)")
         if act == "stale":
@@ -415,6 +512,10 @@ class Transport:
             raise StaleHandle(f"{region_id}@{dst} rkey={rkey}")
         self.stats.bytes_read += size
         self.stats.account(dst, size, "read")
+        if self.tracer is not None:
+            ctx = self.tracer.current()
+            if ctx is not None:
+                ctx.annotate("read." + region_id, node=dst, nbytes=size)
         try:
             data = sink.read(offset, size)
         except Exception:
